@@ -1,0 +1,60 @@
+"""Shared fixtures/timing helpers for the benchmark suite."""
+from __future__ import annotations
+
+import shutil
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import get_config
+from repro.core.steps import init_state, make_train_step
+from repro.data.synthetic import make_batch
+from repro.models.registry import build_model
+
+SEQ, BATCH = 64, 4
+
+
+def bench_model(name: str = "gpt2-l", **overrides):
+    cfg = get_config(name).reduced()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return build_model(cfg)
+
+
+def timeit(fn: Callable, *, warmup: int = 2, iters: int = 5) -> float:
+    """Median seconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def fresh_store(path: str) -> CheckpointStore:
+    shutil.rmtree(path, ignore_errors=True)
+    return CheckpointStore(path)
+
+
+def measured_iter_time(model, steps: int = 6) -> float:
+    """Raw training iteration time (no checkpointing)."""
+    step = make_train_step(model, mode="dense")
+    state = init_state(model, jax.random.PRNGKey(0), mode="dense")
+    b = make_batch(model.cfg, SEQ, BATCH)
+
+    def one():
+        nonlocal state
+        state, _, _ = step(state, b)
+        jax.block_until_ready(state["params"])
+
+    return timeit(one, warmup=2, iters=steps)
+
+
+def row(name: str, seconds_per_call: float, derived: str = "") -> str:
+    """CSV row in the harness format: name,us_per_call,derived."""
+    return f"{name},{seconds_per_call * 1e6:.1f},{derived}"

@@ -1,0 +1,43 @@
+"""Exp. 8 (Fig. 17): impact of compression ratio rho on checkpoint
+frequency.
+
+For rho in [0.001, 0.1]: measure compressed-gradient bytes, derive the
+write time on a 5 GB/s NVMe and the smallest per-checkpoint interval that
+still overlaps with one training iteration (the paper's criterion).
+Paper claims: per-iteration everywhere for GPT2-S; GPT2-L needs 2
+iterations only at rho=0.1.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import BATCH, SEQ, bench_model, row
+from repro.compression.sparse import compress_tree, dense_nbytes, tree_nbytes
+from repro.core.steps import init_state
+
+NVME_BW = 5e9
+# paper-scale projection: GPT2-S (117M) iter 0.35s, GPT2-L (762M) iter 0.9s
+PAPER = {"GPT2-S": (117e6, 0.35), "GPT2-L": (762e6, 0.9)}
+
+
+def main(out):
+    model = bench_model()
+    state = init_state(model, jax.random.PRNGKey(0), mode="dense")
+    grads = state["params"]   # same shapes as a gradient pytree
+    dense_b = dense_nbytes(grads)
+    for rho in (0.001, 0.01, 0.05, 0.075, 0.1):
+        cg = jax.jit(lambda g: compress_tree(g, rho))(grads)
+        b = tree_nbytes(cg)
+        out(row(f"exp8.measured.rho{rho}", 0.0,
+                f"{b / 2**20:.2f}MiB ({b / dense_b * 100:.2f}% of dense)"))
+        for name, (P, iter_s) in PAPER.items():
+            cbytes = rho * P * 4 * 1.5
+            interval = max(1, math.ceil(cbytes / NVME_BW / iter_s))
+            out(row(f"exp8.paper.{name}.rho{rho}", 0.0,
+                    f"interval={interval}"))
+
+
+if __name__ == "__main__":
+    main(print)

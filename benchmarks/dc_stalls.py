@@ -1,0 +1,47 @@
+"""Fig. 1: DC compression / transmission stalls vs frequency.
+
+Measures (a) the cost of compressing a 3Ψ state differential (Naïve DC's
+per-checkpoint compute) and (b) the blocking write of the compressed
+differential, then derives the training slowdown at compression
+frequencies 1/2/4/8 iterations — the measurement behind the paper's
+Challenge 1 & 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_model, fresh_store, measured_iter_time, row, timeit
+from repro.compression.sparse import compress_tree
+from repro.core.lowdiff import host_copy
+from repro.core.steps import init_state
+
+
+def main(out):
+    model = bench_model()
+    state = init_state(model, jax.random.PRNGKey(0), mode="dense")
+    iter_t = measured_iter_time(model)
+
+    # 3Ψ differential (params + both Adam moments), compressed at rho=0.01
+    diff = {"p": state["params"], "mu": state["opt"].mu,
+            "nu": state["opt"].nu}
+    comp = jax.jit(lambda d: compress_tree(d, 0.01))
+    cd = comp(diff)
+    t_comp = timeit(lambda: jax.block_until_ready(comp(diff)))
+    out(row("fig1.compress_3psi", t_comp,
+            f"iter={iter_t * 1e3:.1f}ms"))
+
+    store = fresh_store("/tmp/repro_bench/dc_stalls")
+    payload = host_copy(cd)
+    t_write = timeit(lambda: store.save_diff(0, payload), iters=3)
+    out(row("fig1.write_diff", t_write, ""))
+
+    for freq in (8, 4, 2, 1):
+        slowdown = (t_comp + t_write) / freq / iter_t * 100
+        out(row(f"fig1.slowdown_freq{freq}",
+                iter_t + (t_comp + t_write) / freq,
+                f"slowdown={slowdown:.1f}%"))
+
+
+if __name__ == "__main__":
+    main(print)

@@ -1,0 +1,65 @@
+"""Exp. 5 (Fig. 15): recovery time — Baseline (full reload) vs Naïve DC
+(serial delta merge) vs LowDiff parallel recovery vs LowDiff+(S)
+in-memory restore.
+
+Paper claims: LowDiff parallel recovery beats Baseline by 83.2% and Naïve
+DC by 55.8% at FCF=10; LowDiff+(S) is 9.4-57.1x faster than Baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import BATCH, SEQ, bench_model, fresh_store, row, timeit
+from repro.core.lowdiff import LowDiff
+from repro.core.lowdiff_plus import LowDiffPlus
+from repro.core.steps import init_state
+from repro.data.synthetic import make_batch
+
+
+def main(out):
+    model = bench_model()
+    for n_diffs in (10, 30):
+        store = fresh_store(f"/tmp/repro_bench/rec{n_diffs}")
+        ld = LowDiff(model, store, rho=0.01, full_interval=10_000,
+                     batch_size=2)
+        state = init_state(model, jax.random.PRNGKey(0), mode="lowdiff")
+        store.save_full(0, jax.tree.map(lambda x: x, state))
+        b = make_batch(model.cfg, SEQ, BATCH)
+        for _ in range(n_diffs):
+            state, _ = ld.train_step(state, b)
+        ld.flush()
+
+        t_base = timeit(lambda: store.load_full(store.latest_full()),
+                        iters=3)
+        ld.parallel_recovery = False
+        t_serial = timeit(lambda: ld.recover(), iters=3)
+        ld.parallel_recovery = True
+        ld.recover()   # compile the scan kernel once
+        t_par = timeit(lambda: ld.recover(), iters=3)
+        import math
+        depth = math.ceil(math.log2(n_diffs)) + 1
+        out(row(f"exp5.n{n_diffs}.full_reload", t_base, "baseline io"))
+        out(row(f"exp5.n{n_diffs}.serial_replay", t_serial,
+                f"depth={n_diffs} merges"))
+        out(row(f"exp5.n{n_diffs}.parallel_replay", t_par,
+                f"depth={depth} (log n) wall={t_serial / t_par:.2f}x "
+                f"on 1 core"))
+        ld.close()
+
+    # LowDiff+ software recovery (from CPU replica)
+    store = fresh_store("/tmp/repro_bench/rec_plus")
+    ldp = LowDiffPlus(model, store, persist_interval=1000)
+    state = init_state(model, jax.random.PRNGKey(1), mode="lowdiff_plus")
+    b = make_batch(model.cfg, SEQ, BATCH)
+    for _ in range(5):
+        state, _ = ldp.train_step(state, b)
+    ldp.flush()
+    t_mem = timeit(lambda: ldp.recover_software(state), iters=3)
+    out(row("exp5.lowdiff_plus_mem_restore", t_mem, "in-memory"))
+    ldp.close()
+
+
+if __name__ == "__main__":
+    main(print)

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run with::
+
+    PYTHONPATH=src python -m benchmarks.run [--only exp5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig1_dc_stalls", "benchmarks.dc_stalls"),
+    ("fig4_overlap", "benchmarks.overlap"),
+    ("table1_config", "benchmarks.config_table"),
+    ("exp1_training_time", "benchmarks.training_time"),
+    ("exp3_wasted_time", "benchmarks.wasted_time"),
+    ("exp4_max_frequency", "benchmarks.max_frequency"),
+    ("exp5_recovery", "benchmarks.recovery_bench"),
+    ("exp6_batched_write", "benchmarks.batched_write"),
+    ("exp7_storage", "benchmarks.storage"),
+    ("exp8_compression_ratio", "benchmarks.compression_ratio"),
+    ("exp9_10_scaling", "benchmarks.scaling"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modname in MODULES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main(print)
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving example: decode a batch of requests with a KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    args = argparse.Namespace(arch="qwen2-1.5b", reduced=True, batch=8,
+                              prompt_len=16, gen=32)
+    out = serve.run(args)
+    assert len(out) == args.gen
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

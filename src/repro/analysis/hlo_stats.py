@@ -1,0 +1,68 @@
+"""HLO-text statistics: collective bytes per category.
+
+Parses the post-SPMD (per-device) HLO of a compiled executable and sums
+the *result* sizes of every collective op. Shapes in partitioned HLO are
+per-device, so the totals are per-chip traffic, matching the other
+roofline terms.
+
+Caveat handled by the roofline module: collectives inside a while/scan
+body appear once in the text — segment-composed accounting multiplies by
+trip counts (see repro.analysis.segments).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^=]*?\)?)\s*(" + "|".join(COLLECTIVES) + r")(-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-category per-device bytes (+ 'total', 'count')."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":   # async pair: count only the -start
+            continue
+        result_sig, op = m.group(1), m.group(2)
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(result_sig))
+        out[op] += b
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k in COLLECTIVES)
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, top: int = 15):
+    """Most frequent HLO opcodes (debugging aid for perf iteration)."""
+    ops = re.findall(r"=\s*\(?[\w\[\],{}: ]*?\)?\s*([a-z][\w-]*)\(",
+                     hlo_text)
+    hist = defaultdict(int)
+    for o in ops:
+        hist[o] += 1
+    return sorted(hist.items(), key=lambda kv: -kv[1])[:top]

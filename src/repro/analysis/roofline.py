@@ -1,0 +1,126 @@
+"""Roofline analysis: compute / memory / collective terms per
+(architecture x input shape) on the production mesh.
+
+    compute_term    = FLOPs_per_chip / 197e12        [s]
+    memory_term     = HBM_bytes_per_chip / 819e9     [s]
+    collective_term = collective_bytes_per_chip / 50e9 [s]
+
+FLOPs/bytes come from segment-composed ``cost_analysis`` of the compiled
+dry-run pieces (scan trip counts folded in — see segments.py); collective
+bytes from the partitioned HLO text. MODEL_FLOPS is the analytic
+6·N_active·T (train) / 2·N_active·T (inference) divided across chips —
+its ratio to compiled FLOPs exposes remat/masking/dispatch waste.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # standalone: fake the 512 hosts before jax init
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
+
+import json
+from typing import Dict, Optional
+
+from repro.analysis.segments import compose
+from repro.configs import INPUT_SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                               make_production_mesh)
+from repro.models.registry import build_model
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step (global, all chips)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: one token
+
+
+def roofline(arch: str, shape_id: str, *, multi_pod: bool = False,
+             rules: Optional[dict] = None) -> Dict:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shape = INPUT_SHAPES[shape_id]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    if rules is None:
+        rules = cfg.rules(shape.kind)
+    with shd.use_mesh(mesh, rules):
+        comp = compose(model, shape)
+    t = comp["total"]
+    terms = {
+        "compute_s": t["flops"] / PEAK_FLOPS,
+        "memory_s": t["bytes"] / HBM_BW,
+        "collective_s": t["coll_bytes"] / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / chips
+    rec = {
+        "arch": arch, "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "flops_per_chip": t["flops"],
+        "bytes_per_chip": t["bytes"],
+        "coll_bytes_per_chip": t["coll_bytes"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": round(mf / t["flops"], 4) if t["flops"] else 0,
+        "segments": comp["segments"],
+    }
+    return rec
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED_ARCHS
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    for arch in archs:
+        for shape_id in shapes:
+            if (arch, shape_id, mesh_name) in done:
+                continue
+            try:
+                rec = roofline(arch, shape_id, multi_pod=args.multi_pod)
+            except Exception as e:  # noqa: BLE001
+                import traceback
+                rec = {"arch": arch, "shape": shape_id, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc(limit=4)}
+            if "error" in rec:
+                print(f"[FAIL] {arch:24s} {shape_id:12s} {rec['error']}",
+                      flush=True)
+            else:
+                print(f"[OK ] {arch:24s} {shape_id:12s} "
+                      f"comp={rec['compute_s'] * 1e3:8.2f}ms "
+                      f"mem={rec['memory_s'] * 1e3:8.2f}ms "
+                      f"coll={rec['collective_s'] * 1e3:8.2f}ms "
+                      f"dom={rec['dominant']:10s} "
+                      f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+            results.append(rec)
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                json.dump(results, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

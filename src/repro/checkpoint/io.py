@@ -1,0 +1,137 @@
+"""Atomic pytree checkpoint storage on a filesystem.
+
+A checkpoint is one ``.npz`` (uncompressed zip of raw .npy buffers — the
+write cost is the tensor bytes, which is what the paper's model meters)
+plus an embedded JSON structure descriptor. Writes go to a temp file and
+``os.replace`` in, so readers never observe a torn checkpoint. Supports
+arbitrary nesting of dict / list / tuple / NamedTuple / SparseGrad /
+QuantGrad / jax arrays / numpy / python scalars.
+"""
+from __future__ import annotations
+
+import io as _io
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.compression.quant import QuantGrad
+from repro.compression.sparse import SparseGrad
+
+_NAMEDTUPLES: Dict[str, type] = {}
+
+
+def register_namedtuple(cls) -> type:
+    _NAMEDTUPLES[cls.__name__] = cls
+    return cls
+
+
+def _register_builtin():
+    from repro.models import blocks, encdec, lm, linear_attn, xlstm
+    from repro.optim import adam
+    for cls in (adam.AdamState, linear_attn.LinState, blocks.MambaCache,
+                xlstm.MLSTMCache, xlstm.SLSTMState, lm.DecodeCache,
+                encdec.EncDecCache):
+        register_namedtuple(cls)
+
+
+_register_builtin()
+
+
+def _pack(obj, arrays: List[np.ndarray]):
+    """Recursively encode obj into JSON-able structure + array list."""
+    if isinstance(obj, SparseGrad):
+        return {"__t": "sparse", "shape": list(obj.shape), "block": obj.block,
+                "values": _arr(obj.values, arrays),
+                "indices": _arr(obj.indices, arrays)}
+    if isinstance(obj, QuantGrad):
+        return {"__t": "quant", "shape": list(obj.shape), "block": obj.block,
+                "q": _arr(obj.q, arrays), "scale": _arr(obj.scale, arrays)}
+    if isinstance(obj, dict):
+        return {"__t": "dict",
+                "items": {k: _pack(v, arrays) for k, v in obj.items()}}
+    if hasattr(obj, "_fields"):  # NamedTuple
+        return {"__t": "nt", "cls": type(obj).__name__,
+                "items": {f: _pack(getattr(obj, f), arrays)
+                          for f in obj._fields}}
+    if isinstance(obj, (list, tuple)):
+        return {"__t": "list" if isinstance(obj, list) else "tuple",
+                "items": [_pack(v, arrays) for v in obj]}
+    if isinstance(obj, (jax.Array, np.ndarray, np.generic)):
+        return {"__t": "arr", "i": _arr(obj, arrays)}
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return {"__t": "py", "v": obj}
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _arr(x, arrays: List[np.ndarray]) -> int:
+    a = np.asarray(x)
+    if a.dtype == np.dtype("bfloat16"):
+        arrays.append(a.view(np.uint16))
+        return -len(arrays)  # negative index marks bf16 view
+    arrays.append(a)
+    return len(arrays) - 1
+
+
+def _unpack(node, arrays):
+    t = node["__t"]
+    if t == "sparse":
+        return SparseGrad(_get(node["values"], arrays),
+                          _get(node["indices"], arrays),
+                          tuple(node["shape"]), node["block"])
+    if t == "quant":
+        return QuantGrad(_get(node["q"], arrays), _get(node["scale"], arrays),
+                         tuple(node["shape"]), node["block"])
+    if t == "dict":
+        return {k: _unpack(v, arrays) for k, v in node["items"].items()}
+    if t == "nt":
+        cls = _NAMEDTUPLES[node["cls"]]
+        return cls(**{k: _unpack(v, arrays) for k, v in node["items"].items()})
+    if t == "list":
+        return [_unpack(v, arrays) for v in node["items"]]
+    if t == "tuple":
+        return tuple(_unpack(v, arrays) for v in node["items"])
+    if t == "arr":
+        return _get(node["i"], arrays)
+    if t == "py":
+        return node["v"]
+    raise TypeError(t)
+
+
+def _get(i: int, arrays):
+    import ml_dtypes
+    if i < 0:
+        return arrays[f"a{-i - 1}"].view(ml_dtypes.bfloat16)
+    return arrays[f"a{i}"]
+
+
+def save(path: str, obj: Any) -> int:
+    """Atomic write. Returns bytes written."""
+    arrays: List[np.ndarray] = []
+    struct = _pack(obj, arrays)
+    payload = {f"a{i}": a for i, a in enumerate(arrays)}
+    payload["__struct__"] = np.frombuffer(
+        json.dumps(struct).encode(), dtype=np.uint8)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return os.path.getsize(path)
+
+
+def load(path: str) -> Any:
+    with np.load(path) as z:
+        struct = json.loads(bytes(z["__struct__"]).decode())
+        return _unpack(struct, z)

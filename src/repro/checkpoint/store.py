@@ -1,0 +1,108 @@
+"""Checkpoint directory layout + manifest for full/differential chains.
+
+Layout::
+
+    <dir>/manifest.json                      # index of everything below
+    <dir>/full_00000010.npz                  # model state M_t
+    <dir>/diff_00000011.npz                  # one differential (G̃_t)
+    <dir>/batch_00000012_00000015.npz        # batched differentials
+
+The manifest is rewritten atomically after each successful write, so
+recovery always sees a consistent chain prefix.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.checkpoint import io as cio
+
+
+class CheckpointStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        self.manifest: Dict[str, Any] = {"fulls": [], "diffs": [], "batches": []}
+        self._load_manifest()
+        self.bytes_written = 0
+        self.writes = 0
+
+    # ------------------------------------------------------------------
+    def _manifest_path(self):
+        return os.path.join(self.root, "manifest.json")
+
+    def _load_manifest(self):
+        if os.path.exists(self._manifest_path()):
+            with open(self._manifest_path()) as f:
+                self.manifest = json.load(f)
+
+    def _write_manifest(self):
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(self.manifest, f)
+        os.replace(tmp, self._manifest_path())
+
+    def _record(self, kind: str, entry: dict, nbytes: int):
+        with self._lock:
+            self.manifest[kind].append(entry)
+            self.bytes_written += nbytes
+            self.writes += 1
+            self._write_manifest()
+
+    # ------------------------------------------------------------------
+    def save_full(self, step: int, state) -> str:
+        path = os.path.join(self.root, f"full_{step:08d}.npz")
+        n = cio.save(path, state)
+        self._record("fulls", {"step": step, "path": path, "bytes": n}, n)
+        return path
+
+    def save_diff(self, step: int, payload) -> str:
+        path = os.path.join(self.root, f"diff_{step:08d}.npz")
+        n = cio.save(path, payload)
+        self._record("diffs", {"step": step, "path": path, "bytes": n}, n)
+        return path
+
+    def save_batch(self, first: int, last: int, payloads: list,
+                   mode: str = "concat") -> str:
+        """One I/O operation carrying differentials [first..last]."""
+        path = os.path.join(self.root, f"batch_{first:08d}_{last:08d}.npz")
+        n = cio.save(path, {"mode": mode, "first": first, "last": last,
+                            "payloads": payloads})
+        self._record("batches", {"first": first, "last": last, "path": path,
+                                 "bytes": n}, n)
+        return path
+
+    # ------------------------------------------------------------------
+    def latest_full(self) -> Optional[dict]:
+        fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"])
+        return fulls[-1] if fulls else None
+
+    def load_full(self, entry: dict):
+        return cio.load(entry["path"])
+
+    def diffs_after(self, step: int) -> List[Tuple[int, Any]]:
+        """Ordered (step, payload) list of differentials with step > given."""
+        out = []
+        for e in self.manifest["diffs"]:
+            if e["step"] > step:
+                out.append((e["step"], cio.load(e["path"])))
+        for e in self.manifest["batches"]:
+            blob = None
+            if e["last"] > step:
+                blob = cio.load(e["path"])
+                for i, pay in enumerate(blob["payloads"]):
+                    s = blob["first"] + i
+                    if s > step:
+                        out.append((s, pay))
+        out.sort(key=lambda t: t[0])
+        return out
+
+    def stats(self):
+        return {"writes": self.writes, "bytes": self.bytes_written,
+                "fulls": len(self.manifest["fulls"]),
+                "diffs": len(self.manifest["diffs"]),
+                "batches": len(self.manifest["batches"])}

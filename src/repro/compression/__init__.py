@@ -1,0 +1,7 @@
+from repro.compression.sparse import (  # noqa: F401
+    BLOCK, SparseGrad, compress_tree, decompress_tree, dense_nbytes,
+    k_for, randomk_compress, sparse_add, topk_compress, topk_decompress,
+    tree_nbytes,
+)
+from repro.compression.quant import QuantGrad, quant_compress, quant_decompress  # noqa: F401
+from repro.compression.error_feedback import ef_compress_tree, ef_init  # noqa: F401

@@ -1,0 +1,32 @@
+"""Error-feedback (memory) for biased compressors [Stich et al.'18].
+
+The residual of each compression step is added back before the next
+compression — standard practice with top-k sparsification and required
+for convergence claims. State is a dense pytree like the gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.sparse import SparseGrad, topk_compress, topk_decompress
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, ef_state, rho: float):
+    """Returns (compressed tree, new ef state)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        sg = topk_compress(corrected, rho)
+        residual = corrected - topk_decompress(sg).astype(jnp.float32)
+        return sg, residual
+
+    g_flat, treedef = jax.tree.flatten(grads)
+    e_flat = treedef.flatten_up_to(ef_state)
+    pairs = [one(g, e) for g, e in zip(g_flat, e_flat)]
+    cg = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    ef = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return cg, ef

@@ -1,0 +1,19 @@
+"""GPT2-L (762M) — the paper's own largest evaluation model. [Radford'19]
+
+36L d_model=1280 20H d_ff=5120 vocab=50257. Used by the benchmark suite to
+mirror the paper's GPT2-L experiments (at reduced scale on CPU).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gpt2-l",
+    arch_type="dense",
+    citation="Radford et al. 2019 (paper's Table II)",
+    n_layers=36,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=50257,
+    rope_theta=1e4,
+)

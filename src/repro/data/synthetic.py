@@ -1,0 +1,109 @@
+"""Deterministic synthetic data pipeline.
+
+Produces shardable batches for every architecture/shape without external
+datasets: token streams from a counter-based PRNG (stable across restarts
+— checkpoint-recovery tests rely on byte-identical batch replay), plus
+stub frontend embeddings for the audio/vlm backbones.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (optionally sharded)
+for dry-run lowering — the same dict structure the concrete pipeline
+produces.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec
+
+
+def _tok_rng(seed: int, step: int):
+    return np.random.default_rng(np.uint64(seed * 1_000_003 + step))
+
+
+def make_batch(cfg: ArchConfig, seq_len: int, batch: int, *, step: int = 0,
+               seed: int = 0, kind: str = "train") -> Dict[str, jax.Array]:
+    """Concrete host batch for training / prefill."""
+    rng = _tok_rng(seed, step)
+    if kind == "decode":
+        return {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32),
+            "pos": jnp.asarray(min(seq_len - 1, 7), jnp.int32),
+        }
+    toks = rng.integers(0, cfg.vocab, (batch, seq_len + 1))
+    out = {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        P = min(cfg.n_patches or 16, seq_len // 2)
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, P, cfg.frontend_dim)), cfg.cdtype())
+        mask = np.ones((batch, seq_len), np.float32)
+        mask[:, :P] = 0.0
+        out["loss_mask"] = jnp.asarray(mask)
+    if cfg.arch_type == "audio":
+        Ss = encdec.src_len(cfg, seq_len)
+        out["src_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, Ss, cfg.d_model)) * 0.1, cfg.cdtype())
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                shardings: Optional[dict] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for dry-run lowering.
+
+    ``shardings``: optional {name -> jax.sharding.Sharding}; names:
+    'tokens', 'targets', 'loss_mask', 'patch_embeds', 'src_embeds', 'pos'.
+    """
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shape_, dtype, name):
+        sh = (shardings or {}).get(name)
+        if sh is not None:
+            return jax.ShapeDtypeStruct(shape_, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(shape_, dtype)
+
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32, "tokens"),
+                "pos": sds((), jnp.int32, "pos")}
+    out = {"tokens": sds((B, S), jnp.int32, "tokens"),
+           "targets": sds((B, S), jnp.int32, "targets")}
+    if cfg.arch_type == "vlm":
+        P = min(cfg.n_patches or 16, S // 2)
+        out["patch_embeds"] = sds((B, P, cfg.frontend_dim), cfg.cdtype(),
+                                  "patch_embeds")
+        out["loss_mask"] = sds((B, S), jnp.float32, "loss_mask")
+    if cfg.arch_type == "audio":
+        out["src_embeds"] = sds((B, encdec.src_len(cfg, S), cfg.d_model),
+                                cfg.cdtype(), "src_embeds")
+    return out
+
+
+class TokenStream:
+    """Stateful iterator facade used by the training launcher."""
+
+    def __init__(self, cfg: ArchConfig, seq_len: int, batch: int, seed: int = 0):
+        self.cfg, self.seq_len, self.batch, self.seed = cfg, seq_len, batch, seed
+        self.step = 0
+
+    def __next__(self):
+        b = make_batch(self.cfg, self.seq_len, self.batch,
+                       step=self.step, seed=self.seed)
+        self.step += 1
+        return b
+
+    def __iter__(self):
+        return self
+
+    def state(self):
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state):
+        self.step = int(state["step"])
+        self.seed = int(state["seed"])

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (MaxText-style) + activation constraints.
+
+A global ``MeshContext`` maps *logical* axis names used by the model code
+onto *physical* mesh axes. Model code calls ``shard(x, 'batch', None,
+'heads', None)`` — a no-op when no mesh is active (CPU smoke tests see a
+single device and zero sharding machinery).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axis (or tuple of axes)
+# 'pod' is folded into the data-parallel dimension.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),   # FSDP weight shard axis
+    "seq": None,
+    # sequence-parallel residual stream between blocks (Megatron SP):
+    # the remat-saved layer inputs shard over 'model', which is what keeps
+    # the 405B/235B train shapes inside HBM (see EXPERIMENTS.md §Perf).
+    "residual_seq": "model",
+    "kvseq": "model",          # decode KV-cache sequence sharding
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": None,          # few KV heads: replicate, shard Q heads
+    "qkv": None,
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "frames": None,
+    "null": None,
+}
+
+_TLS = threading.local()
+
+
+class MeshContext:
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        axes = []
+        used = set()
+        for name in logical:
+            phys = self.rules.get(name) if name else None
+            if phys is None:
+                axes.append(None)
+                continue
+            phys_t = phys if isinstance(phys, tuple) else (phys,)
+            phys_t = tuple(a for a in phys_t
+                           if a in self.mesh.axis_names and a not in used)
+            used.update(phys_t)
+            if not phys_t:
+                axes.append(None)
+            elif len(phys_t) == 1:
+                axes.append(phys_t[0])
+            else:
+                axes.append(phys_t)
+        return P(*axes)
+
+    def sharding(self, logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def current() -> Optional[MeshContext]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    prev = current()
+    _TLS.ctx = MeshContext(mesh, rules)
+    try:
+        with mesh:
+            yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def shard(x, *logical):
+    """Constrain activation sharding by logical axes (no-op without mesh).
+
+    Specs are divisibility-checked against the value's shape so odd head
+    counts / tiny batches degrade to replication instead of failing."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = safe_spec(x.shape, ctx.spec(logical), ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def safe_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop axes whose size does not divide the dim (e.g. 12 heads on a
+    16-way model axis) so every arch x mesh combination lowers cleanly."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        # longest prefix of the axis tuple that divides the dim
+        kept = None
+        for n in range(len(axes), 0, -1):
+            total = 1
+            for a in axes[:n]:
+                total *= sizes[a]
+            if dim % total == 0:
+                kept = axes[0] if n == 1 else axes[:n]
+                break
+        out.append(kept)
+    return P(*out)
+
+
+def safe_sharding_tree(abstract_tree, logical_tree):
+    """NamedShardings for a tree of ShapeDtypeStructs/arrays, with
+    divisibility-checked specs."""
+    ctx = current()
+    assert ctx is not None
+
+    def one(leaf, logical):
+        spec = ctx.spec(logical)
+        return NamedSharding(ctx.mesh, safe_spec(leaf.shape, spec, ctx.mesh))
+
+    leaves, treedef = jax.tree.flatten(abstract_tree)
+    logs = treedef.flatten_up_to(logical_tree)
+    return treedef.unflatten([one(l, lg) for l, lg in zip(leaves, logs)])
+
+
+def pspec_tree(logical_tree):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    ctx = current()
+    if ctx is None:
+        return jax.tree.map(lambda _: P(), logical_tree,
+                            is_leaf=lambda l: isinstance(l, tuple))
+    return jax.tree.map(lambda l: ctx.spec(l), logical_tree,
+                        is_leaf=lambda l: isinstance(l, tuple))
+
+
+def sharding_tree(logical_tree):
+    ctx = current()
+    assert ctx is not None, "sharding_tree requires an active mesh"
+    return jax.tree.map(lambda l: ctx.sharding(l), logical_tree,
+                        is_leaf=lambda l: isinstance(l, tuple))

@@ -1,0 +1,105 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs as traced jnp on the host, which validates the exact
+TPU program. On a TPU backend the same call sites compile the Mosaic
+kernels. ``use_pallas=False`` routes to the pure-jnp oracle instead
+(used to cross-check and as the default inside larger jitted graphs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression.sparse import BLOCK, SparseGrad, _pad_len, k_for
+from repro.kernels import fused_adam as _fa
+from repro.kernels import quant8 as _q8
+from repro.kernels import ref as _ref
+from repro.kernels import topk as _tk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_blocks(x: jax.Array, block: int):
+    flat = x.reshape(-1)
+    pad = _pad_len(flat.size, block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(-1, block)
+    # pallas grid wants row-count divisible by the tile height
+    rpad = _pad_len(xb.shape[0], _tk.ROWS)
+    if rpad:
+        xb = jnp.pad(xb, ((0, rpad), (0, 0)))
+    return xb, xb.shape[0] - rpad
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block", "use_pallas"))
+def topk_compress(x: jax.Array, rho: float, *, block: int = BLOCK,
+                  use_pallas: bool = True) -> SparseGrad:
+    xb, nb = _to_blocks(x, block)
+    k = k_for(rho, block)
+    if use_pallas:
+        vals, idx = _tk.topk_select(xb, k, interpret=_interpret())
+    else:
+        vals, idx = _ref.topk_select_ref(xb, k)
+    return SparseGrad(vals[:nb], idx[:nb], x.shape, block)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def topk_decompress(sg: SparseGrad, *, use_pallas: bool = True) -> jax.Array:
+    nb = sg.values.shape[0]
+    rpad = _pad_len(nb, _tk.ROWS)
+    vals = jnp.pad(sg.values, ((0, rpad), (0, 0)))
+    idx = jnp.pad(sg.indices, ((0, rpad), (0, 0)))
+    if use_pallas:
+        dense = _tk.topk_scatter(vals, idx, sg.block, interpret=_interpret())
+    else:
+        dense = _ref.topk_scatter_ref(vals, idx, sg.block)
+    n = int(np.prod(sg.shape)) if sg.shape else 1
+    return dense[:nb].reshape(-1)[:n].reshape(sg.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_pallas"))
+def quant_compress(x: jax.Array, *, block: int = BLOCK,
+                   use_pallas: bool = True):
+    xb, nb = _to_blocks(x, block)
+    if use_pallas:
+        q, scale = _q8.quantize(xb, interpret=_interpret())
+    else:
+        q, scale = _ref.quantize_ref(xb)
+    return q[:nb], scale[:nb]
+
+
+def adam_hyper(lr, b1, b2, eps, count) -> jax.Array:
+    c1 = 1.0 - b1 ** count
+    c2 = 1.0 - b2 ** count
+    return jnp.asarray([[lr, b1, b2, eps, c1, c2, 0.0, 0.0]], jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def fused_adam_update(p: jax.Array, g: jax.Array, mu: jax.Array,
+                      nu: jax.Array, hyper: jax.Array, *,
+                      use_pallas: bool = True):
+    """Flat-tensor fused Adam. Shapes all equal; returns (p', mu', nu')."""
+    shape = p.shape
+    pb, nb = _to_blocks(p, _fa.COLS)
+    gb, _ = _to_blocks(g, _fa.COLS)
+    mub, _ = _to_blocks(mu, _fa.COLS)
+    nub, _ = _to_blocks(nu, _fa.COLS)
+    if use_pallas:
+        p2, mu2, nu2 = _fa.adam_tile_update(pb, gb, mub, nub, hyper,
+                                            interpret=_interpret())
+    else:
+        p2, mu2, nu2 = _ref.adam_tile_update_ref(pb, gb, mub, nub, hyper)
+    n = int(np.prod(shape)) if shape else 1
+
+    def unblock(x, dt):
+        return x.reshape(-1)[:n].reshape(shape).astype(dt)
+
+    return unblock(p2, p.dtype), unblock(mu2, jnp.float32), \
+        unblock(nu2, jnp.float32)

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: blockwise absmax int8 quantization (+ dequant).
+
+One (R, BLOCK) VMEM tile per grid step; absmax row-reduce -> scale,
+round-to-nearest-even via jnp.round, saturating cast. Memory-bound by
+design (single pass over the gradient).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (R, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0,
+                        1e-12)                          # (R, 1)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def quantize(xb: jax.Array, *, interpret: bool = False):
+    """xb: (nb, block) -> (q int8 (nb, block), scale f32 (nb, 1))."""
+    nb, block = xb.shape
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+
+
+def _dequant_kernel(q_ref, scale_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+def dequantize(q: jax.Array, scale: jax.Array, *, interpret: bool = False):
+    nb, block = q.shape
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (test + CPU fallback path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_select_ref(xb: jax.Array, k: int):
+    """xb: (nb, block) -> (values, indices) — magnitude top-k per block."""
+    mag = jnp.abs(xb.astype(jnp.float32))
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(xb, idx, axis=1)
+    return vals, idx.astype(jnp.int32)
+
+
+def topk_scatter_ref(vals: jax.Array, idxs: jax.Array, block: int):
+    nb, k = vals.shape
+    out = jnp.zeros((nb, block), vals.dtype)
+    return jax.vmap(lambda o, i, v: o.at[i].add(v))(out, idxs, vals)
+
+
+def quantize_ref(xb: jax.Array):
+    x = xb.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def adam_tile_update_ref(p, g, mu, nu, hyper):
+    lr, b1, b2, eps, c1, c2 = (hyper[0, i] for i in range(6))
+    pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
+    mu2 = b1 * mu + (1.0 - b1) * gf
+    nu2 = b2 * nu + (1.0 - b2) * gf * gf
+    step = lr * (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
+    return (pf - step).astype(p.dtype), mu2, nu2

@@ -1,0 +1,145 @@
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input shape) combination on the
+production meshes — (16,16) single pod and (2,16,16) two pods — and
+records memory analysis, cost analysis and collective statistics.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+"""
+# The two lines below MUST run before any other import (jax locks the
+# device count on first backend initialization).
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo_stats import collective_bytes
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.distributed.step_builder import (make_sharded_serve_step,
+                                            make_sharded_train_step,
+                                            make_sharded_prefill_step)
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+
+
+def lower_combo(arch: str, shape_id: str, *, multi_pod: bool = False,
+                train_mode: str = "lowdiff_sharded",
+                rules: dict = None, keep_text: bool = False) -> dict:
+    """Lower + compile one combination; returns the §Dry-run record."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shape = INPUT_SHAPES[shape_id]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if rules is None:
+        rules = cfg.rules(shape.kind)
+    rec = {"arch": arch, "shape": shape_id,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "mode": shape.kind, "status": "ok"}
+    t0 = time.time()
+    with shd.use_mesh(mesh, rules):
+        if shape.kind == "decode":
+            step, aps, acache, ab = make_sharded_serve_step(model, shape)
+            lowered = step.lower(aps, acache, ab)
+            rec["step_kind"] = "serve_step"
+        elif shape.kind == "prefill":
+            step, aps, ab = make_sharded_prefill_step(model, shape)
+            lowered = step.lower(aps, ab)
+            rec["step_kind"] = "prefill_step"
+        else:
+            step, ast, ab = make_sharded_train_step(model, shape,
+                                                    mode=train_mode)
+            lowered = step.lower(ast, ab)
+            rec["step_kind"] = f"train_step[{train_mode}]"
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        m = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(m.argument_size_in_bytes),
+            "output_bytes": int(m.output_size_in_bytes),
+            "temp_bytes": int(m.temp_size_in_bytes),
+            "alias_bytes": int(m.alias_size_in_bytes),
+            "peak_bytes_est": int(m.argument_size_in_bytes
+                                  + m.output_size_in_bytes
+                                  + m.temp_size_in_bytes
+                                  - m.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+        text = compiled.as_text()
+        rec["collectives"] = collective_bytes(text)
+        rec["n_devices"] = mesh.devices.size
+        if keep_text:
+            rec["hlo_text"] = text
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape id (default: all)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--train-mode", default="lowdiff_sharded",
+                    choices=["dense", "lowdiff_sharded"])
+    ap.add_argument("--out", default=None, help="incremental JSON output")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    pods = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.multi_pod]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    for mp in pods:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for arch in archs:
+            for shape_id in shapes:
+                if (arch, shape_id, mesh_name) in done:
+                    continue
+                try:
+                    rec = lower_combo(arch, shape_id, multi_pod=mp,
+                                      train_mode=args.train_mode)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape_id,
+                           "mesh": mesh_name, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc(limit=6)}
+                tag = ("OK " if rec["status"] == "ok" else "FAIL")
+                print(f"[{tag}] {mesh_name:8s} {arch:24s} {shape_id:12s} "
+                      + (f"compile={rec.get('compile_s')}s "
+                         f"peak={rec['memory']['peak_bytes_est'] / 2**30:.1f}GiB"
+                         if rec["status"] == "ok" else rec["error"]),
+                      flush=True)
+                results.append(rec)
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".",
+                                exist_ok=True)
+                    json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    print(f"\n{n_ok}/{len(results)} combinations lowered+compiled")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,73 @@
+"""Batched-request serving driver (decode loop with KV cache).
+
+Serves a model with a batch of concurrent requests: one prefill-free
+warm start (zero cache) or a short prompt prefill via repeated decode,
+then autoregressive decoding, reporting tokens/s.
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --batch 8 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import make_batch
+from repro.models.registry import build_model
+
+
+def run(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    total = args.prompt_len + args.gen
+    cache = model.init_cache(args.batch, total)
+    step = jax.jit(lambda p, c, b: model.decode_step(p, c, b, total))
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+    tokens = jnp.asarray(prompt[:, :1], jnp.int32)
+    out_tokens = []
+
+    t0 = time.perf_counter()
+    for pos in range(total - 1):
+        batch = {"tokens": tokens, "pos": jnp.asarray(pos, jnp.int32)}
+        logits, cache = step(params, cache, batch)
+        if pos + 1 < args.prompt_len:
+            tokens = jnp.asarray(prompt[:, pos + 1:pos + 2], jnp.int32)
+        else:
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out_tokens.append(np.asarray(tokens[:, 0]))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    n_generated = len(out_tokens) * args.batch
+    print(f"arch={cfg.name} batch={args.batch} "
+          f"prompt={args.prompt_len} generated={len(out_tokens)}/req")
+    print(f"{n_generated} tokens in {dt:.2f}s -> "
+          f"{n_generated / dt:.1f} tok/s (batch-aggregate)")
+    print("sample continuation (req 0):",
+          [int(t[0]) for t in out_tokens[:10]])
+    return out_tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    run(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

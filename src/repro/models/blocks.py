@@ -1,0 +1,224 @@
+"""Block-level mixers shared by the model zoo.
+
+Each mixer exposes ``*_specs(cfg)`` (ParamSpec tree) and apply functions for
+train/prefill (full sequence) and decode (single token + cache slice).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import linear_attn as la
+from repro.models import ops
+from repro.models.param import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# GQA attention mixer
+# --------------------------------------------------------------------------
+
+def attention_specs(cfg: ArchConfig, layers: int) -> dict:
+    d, hd = cfg.d_model, cfg.hd()
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    L = (layers,)
+    specs = {
+        "wq": ParamSpec(L + (d, H * hd), ("layers", "fsdp", "heads")),
+        "wk": ParamSpec(L + (d, KV * hd), ("layers", "fsdp", "kv_heads")),
+        "wv": ParamSpec(L + (d, KV * hd), ("layers", "fsdp", "kv_heads")),
+        "wo": ParamSpec(L + (H * hd, d), ("layers", "heads", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec(L + (H * hd,), ("layers", "heads"), init="zeros")
+        specs["bk"] = ParamSpec(L + (KV * hd,), ("layers", "kv_heads"), init="zeros")
+        specs["bv"] = ParamSpec(L + (KV * hd,), ("layers", "kv_heads"), init="zeros")
+    return specs
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    B, S, d = x.shape
+    hd, H, KV = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if positions is not None:
+        q = ops.apply_rope(q, positions, cfg.rope_theta)
+        k = ops.apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attention_apply(p, x, cfg: ArchConfig, *, positions, causal=True,
+                    window=0, kv: Optional[tuple] = None):
+    """Full-sequence attention. ``kv`` overrides keys/values (cross-attn)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    if kv is not None:
+        k, v = kv
+        causal = False
+    out = ops.attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_decode(p, x, cfg: ArchConfig, cache_k, cache_v, pos, *,
+                     window=0, ring=False, cross_kv=None):
+    """x: (B, 1, d). cache_k/v: (B, Sc, KV, hd). Returns (out, k', v')."""
+    B, _, d = x.shape
+    Sc = cache_k.shape[1]
+    slot = pos % Sc if ring else pos
+    q, k, v = _qkv(p, x, cfg, pos[None] if pos.ndim == 0 else pos)
+    if cross_kv is None:
+        cache_k = ops.cache_update(cache_k, k[:, 0], slot)
+        cache_v = ops.cache_update(cache_v, v[:, 0], slot)
+        eff_pos = jnp.minimum(pos, Sc - 1) if ring else pos
+        out = ops.decode_attention(q[:, 0], cache_k, cache_v,
+                                   Sc - 1 if ring else pos,
+                                   window=0 if ring else window)
+    else:
+        ck, cv = cross_kv
+        out = ops.decode_attention(q[:, 0], ck, cv, ck.shape[1] - 1)
+    out = jnp.einsum("bh,hd->bd", out.reshape(B, -1),
+                     p["wo"].astype(x.dtype))
+    return out[:, None], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# Dense SwiGLU FFN
+# --------------------------------------------------------------------------
+
+def ffn_specs(cfg: ArchConfig, layers: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    L = (layers,)
+    return {
+        "wg": ParamSpec(L + (d, f), ("layers", "fsdp", "mlp")),
+        "wu": ParamSpec(L + (d, f), ("layers", "fsdp", "mlp")),
+        "wd": ParamSpec(L + (f, d), ("layers", "mlp", "fsdp")),
+    }
+
+
+def ffn_apply(p, x):
+    return ops.swiglu(x, p["wg"], p["wu"], p["wd"])
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 style selective-SSM mixer (Hymba's parallel SSM heads)
+# --------------------------------------------------------------------------
+
+def _causal_conv(x, kernel):
+    """Depthwise causal conv. x: (B,S,C); kernel: (W,C)."""
+    W = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    S = x.shape[1]
+    for j in range(W):
+        out = out + kernel[j].astype(jnp.float32) * xp[:, j:j + S].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def mamba_specs(cfg: ArchConfig, layers: int) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_dim
+    Hm = max(1, di // 64)
+    L = (layers,)
+    return {
+        "wx": ParamSpec(L + (d, di), ("layers", "fsdp", "mlp")),
+        "wz": ParamSpec(L + (d, di), ("layers", "fsdp", "mlp")),
+        "wB": ParamSpec(L + (d, N), ("layers", "fsdp", "state")),
+        "wC": ParamSpec(L + (d, N), ("layers", "fsdp", "state")),
+        "wdt": ParamSpec(L + (d, Hm), ("layers", "fsdp", "heads")),
+        "dt_bias": ParamSpec(L + (Hm,), ("layers", "heads"), init="zeros"),
+        "A_log": ParamSpec(L + (Hm,), ("layers", "heads"), init="zeros"),
+        "Dskip": ParamSpec(L + (Hm,), ("layers", "heads"), init="ones"),
+        "conv": ParamSpec(L + (cfg.ssm.conv_width, di), ("layers", "conv", "mlp"),
+                          init="normal", scale=0.5),
+        "wout": ParamSpec(L + (di, d), ("layers", "mlp", "fsdp")),
+    }
+
+
+def _mamba_qkv(p, x, cfg: ArchConfig):
+    B, S, d = x.shape
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_dim
+    Hm = max(1, di // 64)
+    hp = di // Hm
+    xm = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    return xm, z, di, N, Hm, hp
+
+
+def mamba_apply(p, x, cfg: ArchConfig):
+    B, S, d = x.shape
+    xm, z, di, N, Hm, hp = _mamba_qkv(p, x, cfg)
+    xm = jax.nn.silu(_causal_conv(xm, p["conv"]).astype(jnp.float32)).astype(x.dtype)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (Hm,)
+    ld = dt * A                                         # (B,S,Hm) <= 0
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, S, Hm, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, S, Hm, N))
+    v = xm.reshape(B, S, Hm, hp) * dt[..., None].astype(x.dtype)
+    y = la.chunked(q, k, v, ld, chunk=cfg.ssm.chunk)
+    y = y + xm.reshape(B, S, Hm, hp) * p["Dskip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["wout"].astype(x.dtype))
+
+
+class MambaCache(NamedTuple):
+    state: la.LinState
+    conv: jax.Array        # (B, W-1, di) trailing inputs
+
+
+def mamba_cache_shape(cfg: ArchConfig, B):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    N = cfg.ssm.state_dim
+    Hm = max(1, di // 64)
+    hp = di // Hm
+    return MambaCache(
+        la.LinState(jnp.zeros((B, Hm, N, hp), jnp.float32),
+                    jnp.zeros((B, Hm, N), jnp.float32),
+                    jnp.zeros((B, Hm), jnp.float32)),
+        jnp.zeros((B, cfg.ssm.conv_width - 1, di), jnp.float32))
+
+
+def mamba_decode(p, x, cfg: ArchConfig, cache: MambaCache):
+    """x: (B,1,d) -> (out (B,1,d), new cache)."""
+    B, _, d = x.shape
+    xm, z, di, N, Hm, hp = _mamba_qkv(p, x, cfg)
+    hist = jnp.concatenate([cache.conv, xm.astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist,
+                          p["conv"].astype(jnp.float32))
+    xm1 = jax.nn.silu(conv_out).astype(x.dtype)         # (B,di)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(x.dtype))[:, 0]
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(x.dtype))[:, 0]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        + p["dt_bias"].astype(jnp.float32))             # (B,Hm)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    ld = dt * A
+    q = jnp.broadcast_to(Cm[:, None, :], (B, Hm, N))
+    k = jnp.broadcast_to(Bm[:, None, :], (B, Hm, N))
+    v = xm1.reshape(B, Hm, hp) * dt[..., None].astype(x.dtype)
+    st, y = la.decode_step(cache.state, q, k, v, ld)
+    y = y.astype(x.dtype) + xm1.reshape(B, Hm, hp) * p["Dskip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, di) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)[:, 0]
+    out = jnp.einsum("be,ed->bd", y, p["wout"].astype(x.dtype))
+    new_cache = MambaCache(st, hist[:, 1:])
+    return out[:, None], new_cache

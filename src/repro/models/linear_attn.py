@@ -1,0 +1,156 @@
+"""Chunkwise-parallel linear attention with gating.
+
+One engine serves both recurrent families in the model zoo:
+  * mLSTM (xLSTM): exponential input gate + sigmoid forget gate, running
+    max-stabilizer, normalizer state  -> ``stabilize=True, normalize=True``
+  * Mamba-2 / SSD (Hymba's SSM heads): scalar per-head decay from dt·A,
+    no input gate / normalizer        -> ``stabilize=False``
+
+Recurrence (per head):
+    S_t = exp(ld_t) S_{t-1} + exp(li_t) k_t v_t^T
+    n_t = exp(ld_t) n_{t-1} + exp(li_t) k_t
+    y_t = q_t S_t   [ / max(|q_t n_t|, 1) when normalize ]
+
+The chunked form computes, per chunk of width W, the intra-chunk part as a
+decay-masked (W, W) attention and carries (S, n, m) across chunks — the
+standard TPU-friendly formulation (quadratic only within the chunk, MXU
+matmuls throughout). A step-by-step ``reference_scan`` is provided for the
+test oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+class LinState(NamedTuple):
+    S: jax.Array      # (B, H, N, P)
+    n: jax.Array      # (B, H, N)
+    m: jax.Array      # (B, H) running stabilizer (log-space)
+
+
+def init_state(B, H, N, P, dtype=jnp.float32) -> LinState:
+    return LinState(jnp.zeros((B, H, N, P), dtype),
+                    jnp.zeros((B, H, N), dtype),
+                    jnp.zeros((B, H), dtype))
+
+
+def _chunk(x, W):
+    B, S = x.shape[:2]
+    return x.reshape(B, S // W, W, *x.shape[2:])
+
+
+def chunked(q, k, v, log_decay, log_in=None, *, chunk=128,
+            normalize=False, stabilize=False,
+            state: Optional[LinState] = None, return_state=False):
+    """q,k: (B,S,H,N); v: (B,S,H,P); log_decay/log_in: (B,S,H)."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    W = min(chunk, S)
+    assert S % W == 0
+    if log_in is None:
+        log_in = jnp.zeros_like(log_decay)
+    if state is None:
+        state = init_state(B, H, N, P)
+
+    qc, kc, vc = (_chunk(x.astype(jnp.float32), W) for x in (q, k, v))
+    ldc, lic = _chunk(log_decay.astype(jnp.float32), W), _chunk(
+        log_in.astype(jnp.float32), W)
+    nchunks = S // W
+    tri = jnp.tril(jnp.ones((W, W), bool))              # s <= t
+
+    def step(carry, xs):
+        Sst, nst, mst = carry
+        qb, kb, vb, ldb, lib = xs                       # (B,W,H,*) / (B,W,H)
+        cum = jnp.cumsum(ldb, axis=1)                   # (B,W,H) inclusive
+        if stabilize:
+            # m_t = max(m_prev + cum_t, cum_t + cummax_{s<=t}(li_s - cum_s))
+            inner = jax.lax.cummax(lib - cum, axis=1)
+            m_t = jnp.maximum(mst[:, None] + cum, cum + inner)   # (B,W,H)
+        else:
+            m_t = jnp.zeros_like(cum)
+        # inter-chunk: y += exp(cum_t + m_prev - m_t) * q_t  S_prev
+        inter_w = jnp.exp(cum + mst[:, None] - m_t)     # (B,W,H)
+        y_inter = jnp.einsum("bthn,bhnp->bthp", qb, Sst) * inter_w[..., None]
+        d_inter = jnp.einsum("bthn,bhn->bth", qb, nst) * inter_w
+        # intra-chunk decay matrix D(t,s) = exp(cum_t - cum_s + li_s - m_t)
+        logD = (cum[:, :, None] - cum[:, None, :] + lib[:, None, :]
+                - m_t[:, :, None])                      # (B,t,s,H)
+        logD = jnp.where(tri[None, :, :, None], logD, NEG)
+        D = jnp.exp(logD)
+        scores = jnp.einsum("bthn,bshn->btsh", qb, kb) * D
+        y_intra = jnp.einsum("btsh,bshp->bthp", scores, vb)
+        d_intra = scores.sum(axis=2)                    # (B,t,H)
+        y = y_inter + y_intra                           # (B,W,H,P)
+        if normalize:
+            den = d_inter + d_intra
+            y = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # carry update (evaluate at t = W)
+        cW = cum[:, -1]                                 # (B,H)
+        mW = m_t[:, -1]
+        Snew = Sst * jnp.exp(cW + mst - mW)[..., None, None]
+        upd_w = jnp.exp(cW[:, None] - cum + lib - mW[:, None])  # (B,W,H)
+        Snew = Snew + jnp.einsum("bshn,bshp->bhnp", kb * upd_w[..., None], vb)
+        nnew = (nst * jnp.exp(cW + mst - mW)[..., None]
+                + jnp.einsum("bshn->bhn", kb * upd_w[..., None]))
+        return LinState(Snew, nnew, mW), y
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), ldc.transpose(1, 0, 2, 3),
+          lic.transpose(1, 0, 2, 3))
+    from repro.models.ops import scan_unroll
+    final, ys = jax.lax.scan(step, state, xs, unroll=scan_unroll())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P).astype(q.dtype)
+    if return_state:
+        return y, final
+    return y
+
+
+def decode_step(state: LinState, q, k, v, log_decay, log_in=None, *,
+                normalize=False, stabilize=False):
+    """Single-token recurrent update. q,k: (B,H,N); v: (B,H,P); gates (B,H)."""
+    if log_in is None:
+        log_in = jnp.zeros_like(log_decay)
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    ld, li = log_decay.astype(jnp.float32), log_in.astype(jnp.float32)
+    if stabilize:
+        m_new = jnp.maximum(state.m + ld, li)
+    else:
+        m_new = jnp.zeros_like(state.m)
+    fw = jnp.exp(ld + state.m - m_new)
+    iw = jnp.exp(li - m_new)
+    S = state.S * fw[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", k * iw[..., None], v)
+    n = state.n * fw[..., None] + k * iw[..., None]
+    y = jnp.einsum("bhn,bhnp->bhp", q, S)
+    if normalize:
+        den = jnp.einsum("bhn,bhn->bh", q, n)
+        y = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return LinState(S, n, m_new), y.astype(jnp.float32)
+
+
+def reference_scan(q, k, v, log_decay, log_in=None, *, normalize=False,
+                   stabilize=False, state: Optional[LinState] = None):
+    """Step-by-step oracle for tests (identical math, O(S) scan)."""
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    if state is None:
+        state = init_state(B, H, N, P)
+    if log_in is None:
+        log_in = jnp.zeros_like(log_decay)
+
+    def step(st, xs):
+        qt, kt, vt, ldt, lit = xs
+        st2, y = decode_step(st, qt, kt, vt, ldt, lit,
+                             normalize=normalize, stabilize=stabilize)
+        return st2, y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_decay.transpose(1, 0, 2),
+          log_in.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(q.dtype), final

@@ -1,0 +1,339 @@
+"""Decoder-only language model assembly (dense / moe / vlm / hybrid / ssm).
+
+The layer stack is scanned (stacked leading 'layers' dim) with optional
+rematerialization; heterogeneous per-layer attention windows (Hymba) ride
+along as scan inputs. Decode threads per-layer cache slices through the
+same scan.
+
+Batch dicts:
+  train/prefill: {"tokens": (B,S) i32, "targets": (B,S) i32,
+                  ["patch_embeds": (B,P,Fd)]}
+  decode:        {"tokens": (B,1) i32, "pos": () i32}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import blocks, moe as moe_lib, ops, xlstm
+from repro.models.param import ParamSpec, abstractify, materialize
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+def layer_specs(cfg: ArchConfig, layers: Optional[int] = None) -> dict:
+    L = layers if layers is not None else cfg.n_layers
+    t = cfg.arch_type
+    if t == "ssm":  # xLSTM: scan over (mLSTM, sLSTM) pairs
+        assert cfg.slstm_every == 2 and L % 2 == 0
+        return {"mlstm": xlstm.mlstm_specs(cfg, L // 2),
+                "slstm": xlstm.slstm_specs(cfg, L // 2)}
+    specs = {
+        "attn_norm": ParamSpec((L, cfg.d_model), ("layers", "embed"), init="ones"),
+        "attn": blocks.attention_specs(cfg, L),
+        "ffn_norm": ParamSpec((L, cfg.d_model), ("layers", "embed"), init="ones"),
+    }
+    if t == "moe":
+        specs["moe"] = moe_lib.moe_specs(cfg, L)
+    else:
+        specs["ffn"] = blocks.ffn_specs(cfg, L)
+    if t == "hybrid":
+        specs["mamba"] = blocks.mamba_specs(cfg, L)
+    return specs
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "layers": layer_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, V), ("embed", "vocab"))
+    if cfg.arch_type == "vlm":
+        specs["projector"] = ParamSpec((cfg.frontend_dim, d), ("null", "embed"))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Per-layer window pattern (hybrid archs)
+# --------------------------------------------------------------------------
+
+def layer_windows(cfg: ArchConfig) -> np.ndarray:
+    """window per layer; 0 = full attention."""
+    w = np.full((cfg.n_layers,), cfg.sliding_window, np.int32)
+    for i in cfg.global_attn_layers:
+        w[i] = 0
+    return w
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _std_block(lp, h, cfg: ArchConfig, positions, window):
+    """One dense/moe/vlm/hybrid block. Returns (h, aux)."""
+    x = ops.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    attn_out = blocks.attention_apply(lp["attn"], x, cfg,
+                                      positions=positions, window=window)
+    if cfg.arch_type == "hybrid":
+        m_out = blocks.mamba_apply(lp["mamba"], x, cfg)
+        attn_out = 0.5 * (attn_out + m_out)
+    h = h + attn_out
+    x = ops.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    aux = jnp.float32(0)
+    if cfg.arch_type == "moe":
+        f_out, aux = moe_lib.moe_apply(lp["moe"], x, cfg)
+    else:
+        f_out = blocks.ffn_apply(lp["ffn"], x)
+    return h + f_out, aux
+
+
+def stack_apply(params, h, cfg: ArchConfig, positions):
+    """Scan the layer stack. Returns (h, aux_sum)."""
+    if cfg.arch_type == "ssm":
+        def pair(h, lp):
+            h = xlstm.mlstm_apply(lp["mlstm"], h, cfg)
+            h = xlstm.slstm_apply(lp["slstm"], h, cfg)
+            # sequence-parallel residual between blocks (remat stash shards)
+            return shard(h, "batch", "residual_seq", None), jnp.float32(0)
+        body = jax.checkpoint(pair) if cfg.remat else pair
+        h, aux = jax.lax.scan(lambda c, lp: body(c, lp), h, params["layers"],
+                              unroll=ops.scan_unroll())
+        return h, aux.sum()
+
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def one(h, xs):
+        lp, w = xs
+        h, aux = _std_block(lp, h, cfg, positions, w)
+        # sequence-parallel residual between blocks (remat stash shards)
+        return shard(h, "batch", "residual_seq", None), aux
+
+    if len(set(layer_windows(cfg).tolist())) == 1:
+        w0 = int(layer_windows(cfg)[0])
+        def one(h, xs):  # noqa: F811 — static window specialization
+            lp, _ = xs
+            h, aux = _std_block(lp, h, cfg, positions, w0)
+            return shard(h, "batch", "residual_seq", None), aux
+
+    body = jax.checkpoint(one) if cfg.remat else one
+    h, aux = jax.lax.scan(body, h, (params["layers"], windows),
+                          unroll=ops.scan_unroll())
+    return h, aux.sum()
+
+
+def embed_tokens(params, batch, cfg: ArchConfig):
+    tokens = batch["tokens"]
+    h = params["embed"].astype(cfg.cdtype())[tokens]
+    h = h * jnp.asarray(np.sqrt(cfg.d_model), cfg.cdtype())
+    if cfg.arch_type == "vlm":
+        pe = jnp.einsum("bpf,fd->bpd", batch["patch_embeds"].astype(cfg.cdtype()),
+                        params["projector"].astype(cfg.cdtype()))
+        pe = pe * jnp.asarray(np.sqrt(cfg.d_model), cfg.cdtype())
+        h = jnp.concatenate([pe, h[:, pe.shape[1]:]], axis=1) \
+            if pe.shape[1] < h.shape[1] else pe[:, :h.shape[1]]
+    return shard(h, "batch", None, None)
+
+
+def lm_head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def forward(params, batch, cfg: ArchConfig):
+    """Full-sequence forward to final hidden states (B, S, d)."""
+    h = embed_tokens(params, batch, cfg)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    h, aux = stack_apply(params, h, cfg, positions)
+    h = ops.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """Mean next-token cross-entropy (+ MoE aux). Returns (loss, metrics)."""
+    h, aux = forward(params, batch, cfg)
+    mask = batch.get("loss_mask")
+    tot, cnt = ops.chunked_softmax_xent(
+        h, lm_head_weight(params, cfg), batch["targets"],
+        chunk=cfg.loss_chunk, mask=mask)
+    xent = tot / jnp.maximum(cnt, 1.0)
+    loss = xent + cfg.moe.router_aux_weight * aux
+    return loss, {"xent": xent, "aux": aux, "tokens": cnt}
+
+
+def logits_fn(params, batch, cfg: ArchConfig):
+    """Prefill: final-position logits (B, V) — serving entry point."""
+    h, _ = forward(params, batch, cfg)
+    w = lm_head_weight(params, cfg)
+    return jnp.einsum("bd,dv->bv", h[:, -1], w.astype(h.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Decode (single token, cached)
+# --------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Stacked per-layer caches. Unused fields are () placeholders."""
+    k: Any = ()
+    v: Any = ()
+    mamba: Any = ()
+    mlstm: Any = ()
+    slstm: Any = ()
+
+
+def cache_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Ring-buffer length: full-attn archs bound long contexts by window."""
+    if cfg.sliding_window:
+        need = cfg.sliding_window
+        if cfg.global_attn_layers:
+            return seq_len            # hybrid keeps global layers full
+        return min(seq_len, need)
+    if seq_len > 65536 and cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        return 8192                    # sub-quadratic long-context variant
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, B: int, seq_len: int, abstract=False):
+    Lc = cache_len(cfg, seq_len)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd()
+    dt = cfg.cdtype()
+
+    def mk(shape, dtype):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    if cfg.arch_type == "ssm":
+        d, di, H, hp = xlstm._dims(cfg)
+        n_pairs = cfg.n_layers // 2
+        mc = xlstm.MLSTMCache(
+            la_state(mk, (n_pairs, B, H, hp, hp), (n_pairs, B, H, hp),
+                     (n_pairs, B, H)),
+            mk((n_pairs, B, cfg.ssm.conv_width - 1, di), jnp.float32))
+        sc = xlstm.SLSTMState(*[mk((n_pairs, B, d), jnp.float32)
+                                for _ in range(4)])
+        return DecodeCache(mlstm=mc, slstm=sc)
+
+    k = mk((L, B, Lc, KV, hd), dt)
+    v = mk((L, B, Lc, KV, hd), dt)
+    if cfg.arch_type == "hybrid":
+        d = cfg.d_model
+        di = cfg.ssm.expand * d
+        N = cfg.ssm.state_dim
+        Hm = max(1, di // 64)
+        hp = di // Hm
+        mam = blocks.MambaCache(
+            la_state(mk, (L, B, Hm, N, hp), (L, B, Hm, N), (L, B, Hm)),
+            mk((L, B, cfg.ssm.conv_width - 1, di), jnp.float32))
+        return DecodeCache(k=k, v=v, mamba=mam)
+    return DecodeCache(k=k, v=v)
+
+
+def la_state(mk, s_shape, n_shape, m_shape):
+    from repro.models.linear_attn import LinState
+    return LinState(mk(s_shape, jnp.float32), mk(n_shape, jnp.float32),
+                    mk(m_shape, jnp.float32))
+
+
+def cache_logical(cfg: ArchConfig):
+    """Logical-axis tree matching ``init_cache`` output (for sharding)."""
+    kv = ("layers", "batch", "kvseq", "kv_heads", None)
+    lin = la_logical()
+    if cfg.arch_type == "ssm":
+        from repro.models import xlstm as _x
+        mc = _x.MLSTMCache(lin, ("layers", "batch", None, "mlp"))
+        sc = _x.SLSTMState(*[("layers", "batch", "mlp")] * 4)
+        return DecodeCache(mlstm=mc, slstm=sc)
+    if cfg.arch_type == "hybrid":
+        from repro.models import blocks as _b
+        mam = _b.MambaCache(lin, ("layers", "batch", None, "mlp"))
+        return DecodeCache(k=kv, v=kv, mamba=mam)
+    return DecodeCache(k=kv, v=kv)
+
+
+def la_logical():
+    from repro.models.linear_attn import LinState
+    return LinState(("layers", "batch", None, None, "mlp"),
+                    ("layers", "batch", None, None),
+                    ("layers", "batch", None))
+
+
+def decode_block(lp, h, cfg: ArchConfig, ck, cv, pos, *, window=0,
+                 ring=False, mam=None):
+    """Single-layer decode (also lowered standalone by the roofline
+    composer). Returns (h, k', v', mamba_cache')."""
+    x = ops.rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+    # hybrid: windowed layers use ring slots sized to full cache —
+    # masking handles the window; ring only for long-context dense.
+    a_out, ck2, cv2 = blocks.attention_decode(
+        lp["attn"], x, cfg, ck, cv, pos, window=window, ring=ring)
+    if cfg.arch_type == "hybrid":
+        m_out, mam = blocks.mamba_decode(lp["mamba"], x, cfg, mam)
+        a_out = 0.5 * (a_out + m_out)
+    h = h + a_out
+    x = ops.rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        f_out, _ = moe_lib.moe_apply(lp["moe"], x, cfg)
+    else:
+        f_out = blocks.ffn_apply(lp["ffn"], x)
+    return h + f_out, ck2, cv2, mam
+
+
+def ssm_decode_block(lp, h, cfg: ArchConfig, mc, sc):
+    h, mc2 = xlstm.mlstm_decode(lp["mlstm"], h, cfg, mc)
+    h, sc2 = xlstm.slstm_decode(lp["slstm"], h, cfg, sc)
+    return h, mc2, sc2
+
+
+def decode_step(params, cache: DecodeCache, batch, cfg: ArchConfig,
+                seq_len: int):
+    """One-token decode. batch: {"tokens": (B,1), "pos": ()} -> (logits, cache)."""
+    pos = batch["pos"]
+    h = params["embed"].astype(cfg.cdtype())[batch["tokens"]]
+    h = h * jnp.asarray(np.sqrt(cfg.d_model), cfg.cdtype())
+    h = shard(h, "batch", None, None)
+    Lc = cache_len(cfg, seq_len)
+    ring = Lc < seq_len
+
+    if cfg.arch_type == "ssm":
+        def pair(h, xs):
+            lp, mc, sc = xs
+            h, mc2, sc2 = ssm_decode_block(lp, h, cfg, mc, sc)
+            return h, (mc2, sc2)
+        h, (mc, sc) = jax.lax.scan(
+            pair, h, (params["layers"], cache.mlstm, cache.slstm))
+        new_cache = DecodeCache(mlstm=mc, slstm=sc)
+    else:
+        windows = jnp.asarray(layer_windows(cfg))
+
+        def one(h, xs):
+            lp, ck, cv, w, mam = xs
+            h, ck2, cv2, mam = decode_block(lp, h, cfg, ck, cv, pos,
+                                            window=w, ring=ring, mam=mam)
+            return h, (ck2, cv2, mam)
+
+        mam_in = (cache.mamba if cfg.arch_type == "hybrid"
+                  else jnp.zeros((cfg.n_layers,), jnp.float32))
+        h, (ck, cv, mam) = jax.lax.scan(
+            one, h, (params["layers"], cache.k, cache.v, windows, mam_in))
+        new_cache = DecodeCache(k=ck, v=cv,
+                                mamba=mam if cfg.arch_type == "hybrid" else ())
+
+    h = ops.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = lm_head_weight(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], w.astype(h.dtype),
+                        preferred_element_type=jnp.float32)
+    return logits, new_cache

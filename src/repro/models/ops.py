@@ -1,0 +1,241 @@
+"""Shared numeric building blocks: norms, RoPE, attention, chunked xent.
+
+All functions are pure jnp and shard-friendly (no host control flow on
+traced values). Softmax statistics are kept in f32 regardless of the
+compute dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+# Analysis mode: XLA's cost model counts a while-loop body once, so the
+# roofline composer lowers single-layer segments with every inner scan
+# fully unrolled (trip counts folded into the segment counts instead).
+_UNROLL = False
+
+
+def set_analysis_unroll(flag: bool):
+    global _UNROLL
+    _UNROLL = bool(flag)
+
+
+def scan_unroll():
+    return True if _UNROLL else 1
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    exps = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exps)                       # (hd/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (...,S,hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, q_chunk=512, kv_chunk=1024,
+              q_offset=0, causal_skip=True):
+    """Online-softmax blocked attention (pure-jnp flash).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0 (GQA).
+    Memory is bounded by (B, q_chunk, H, kv_chunk) score tiles.
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+
+    ``causal_skip`` (perf iteration A-3/C-1): statically skip tiles that
+    are fully masked — strictly-upper tiles under causality, and tiles
+    entirely below a *static* window. Halves causal-attention compute and
+    score traffic vs the masked-full baseline. Requires causal, no
+    q_offset, and a static window (traced per-layer windows fall back).
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if _UNROLL:
+        # analysis mode: fewer/bigger tiles => tractable unrolled HLO.
+        # Total FLOPs are tile-size invariant; bytes shift marginally.
+        q_chunk = max(q_chunk, Sq // 8)
+        kv_chunk = max(kv_chunk, Sk // 8)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / (D ** 0.5)
+
+    qr = (q * scale).reshape(B, nq, q_chunk, KV, G, D)
+    kr = k.reshape(B, nk, kv_chunk, KV, D)
+    vr = v.reshape(B, nk, kv_chunk, KV, D)
+
+    static_window = isinstance(window, int)
+    use_skip = (causal_skip and causal and static_window and q_offset == 0
+                and Sq == Sk and nq > 1)
+
+    def kv_tile(state, qb, q_idx, ki_base, ki):
+        acc, m, l = state
+        kb = jax.lax.dynamic_index_in_dim(kr, ki_base + ki, 1, False)
+        vb = jax.lax.dynamic_index_in_dim(vr, ki_base + ki, 1, False)
+        k_idx = (ki_base + ki) * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qb, kb,
+                       preferred_element_type=jnp.float32)
+        qpos, kpos = q_idx[:, None], k_idx[None, :]
+        ok = jnp.ones((q_chunk, kv_chunk), bool)
+        if causal:
+            ok &= kpos <= qpos
+        # window may be a traced per-layer value (hybrid archs)
+        ok &= (jnp.asarray(window) <= 0) | (kpos > qpos - window)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return acc_new, m_new, l_new
+
+    def init_state():
+        return (jnp.zeros((B, q_chunk, KV, G, D), jnp.float32),
+                jnp.full((B, q_chunk, KV, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, q_chunk, KV, G), jnp.float32))
+
+    if use_skip:
+        # static python loop over q blocks; each scans only live kv tiles
+        outs = []
+        for qi in range(nq):
+            qb = qr[:, qi]
+            q_idx = qi * q_chunk + jnp.arange(q_chunk)
+            lo = 0
+            if window and window > 0:
+                lo = max(0, (qi * q_chunk - int(window)) // kv_chunk)
+            # last kv tile touched by this q block's final position
+            hi = min(((qi + 1) * q_chunk - 1) // kv_chunk + 1, nk)
+            live = hi - lo
+
+            def body(state, ki):
+                return kv_tile(state, qb, q_idx, lo, ki), None
+
+            (acc, m, l), _ = jax.lax.scan(body, init_state(),
+                                          jnp.arange(live),
+                                          unroll=scan_unroll())
+            outs.append((acc / jnp.maximum(l, 1e-20)[..., None])
+                        .astype(q.dtype))
+        out = jnp.stack(outs, axis=1)                   # (B,nq,qc,KV,G,D)
+        return out.reshape(B, Sq, H, D)
+
+    def q_block(carry, qi):
+        del carry
+        qb = jax.lax.dynamic_index_in_dim(qr, qi, 1, False)
+        q_idx = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(state, ki):
+            return kv_tile(state, qb, q_idx, 0, ki), None
+
+        (acc, m, l), _ = jax.lax.scan(body, init_state(), jnp.arange(nk),
+                                      unroll=scan_unroll())
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq),
+                             unroll=scan_unroll())
+    # blocks: (nq, B, qc, KV, G, D) -> (B, S, H, D)
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, KV, G, D)
+    return out.reshape(B, Sq, H, D)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B, H, D); k_cache/v_cache: (B, S, KV, D); pos: scalar int32 —
+    index of the current token (entries > pos are invalid).
+    """
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qr = (q * (1.0 / D ** 0.5)).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    idx = jnp.arange(S)
+    ok = idx <= pos
+    ok &= (jnp.asarray(window) <= 0) | (idx > pos - window)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def cache_update(cache, new, pos):
+    """Write ``new`` (B, KV, D) at sequence slot ``pos`` of (B, S, KV, D).
+
+    Uses a masked elementwise write (iota == pos) rather than
+    dynamic_update_slice so a sequence-sharded cache never needs gathering.
+    """
+    S = cache.shape[1]
+    onehot = (jnp.arange(S) == pos)[None, :, None, None]
+    return jnp.where(onehot, new[:, None].astype(cache.dtype), cache)
+
+
+def swiglu(x, wg, wu, wd):
+    g = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, wu.astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, wd.astype(x.dtype))
+
+
+def chunked_softmax_xent(h, w_lm, targets, *, chunk=512, mask=None,
+                         logit_cap=0.0):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    h: (B, S, D) final hidden; w_lm: (D, V); targets: (B, S) int32.
+    Returns (sum_loss, n_tokens). Chunks are rematerialized on backward.
+    """
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    hr = h.reshape(B, n, chunk, D)
+    tr = targets.reshape(B, n, chunk)
+    mr = (mask.reshape(B, n, chunk) if mask is not None
+          else jnp.ones_like(tr, jnp.float32))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hb, tb, mb = xs                                 # (B,chunk,D) ...
+        logits = jnp.einsum("bcd,dv->bcv", hb, w_lm.astype(hb.dtype),
+                            preferred_element_type=jnp.float32)
+        if logit_cap:
+            logits = logit_cap * jnp.tanh(logits / logit_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: shards cleanly
+        # when the vocab dim is model-parallel.
+        onehot = jax.nn.one_hot(tb, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        loss = (lse - tgt) * mb
+        return (carry[0] + loss.sum(), carry[1] + mb.sum()), None
+
+    xs = (jnp.moveaxis(hr, 1, 0), jnp.moveaxis(tr, 1, 0),
+          jnp.moveaxis(mr, 1, 0))
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs,
+                                 unroll=scan_unroll())
+    return tot, cnt

@@ -1,0 +1,86 @@
+"""Parameter specification & materialization.
+
+Models declare their parameters as a pytree of ``ParamSpec`` (shape, logical
+axis names, initializer). From the same spec tree we derive:
+  * concrete initialized params      (``materialize``)
+  * ``jax.ShapeDtypeStruct`` stand-ins for dry-runs (``abstractify``)
+  * ``PartitionSpec`` trees for pjit (``logical_to_pspec`` in
+    repro.distributed.sharding)
+
+Logical axis names used across the model zoo:
+  batch, seq, kvseq, embed, mlp, heads, kv_heads, qkv, vocab, experts,
+  layers, conv, state, null
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float = 1.0            # stddev multiplier (fan-in handled here)
+    dtype: Optional[str] = None   # override param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        std = spec.scale
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    # fan-in scaled normal: last-but-one significant dim treated as fan-in
+    fan_in = spec.shape[0] if len(spec.shape) == 1 else int(np.prod(spec.shape[:-1]))
+    # stacked layer dim doesn't contribute to fan-in
+    if spec.logical and spec.logical[0] == "layers" and len(spec.shape) > 2:
+        fan_in = int(np.prod(spec.shape[1:-1]))
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def materialize(rng, specs, dtype) -> dict:
+    """Initialize a concrete param pytree from a spec tree."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstractify(specs, dtype, shardings=None) -> dict:
+    """ShapeDtypeStruct tree (for .lower() without allocation)."""
+    def leaf(s: ParamSpec, sh=None):
+        dt = jnp.dtype(s.dtype) if s.dtype else dtype
+        if sh is not None:
+            return jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    if shardings is None:
+        return jax.tree.map(leaf, specs, is_leaf=is_spec)
+    return jax.tree.map(leaf, specs, shardings, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    """Pytree of logical-axis tuples matching the param tree."""
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))

@@ -1,0 +1,60 @@
+"""Uniform Model facade: build any assigned architecture from its config."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, lm
+from repro.models.param import abstractify, logical_axes, materialize, param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    specs: Any
+    loss_fn: Callable            # (params, batch) -> (loss, metrics)
+    logits_fn: Callable          # (params, batch) -> (B, V) final-pos logits
+    init_cache: Callable         # (B, seq_len, abstract=False) -> cache
+    decode_step: Callable        # (params, cache, batch, seq_len) -> (logits, cache)
+    cache_logical: Callable      # () -> logical-axis tree matching the cache
+    prefill_cache: Optional[Callable] = None
+
+    def init(self, rng) -> dict:
+        return materialize(rng, self.specs, self.cfg.pdtype())
+
+    def abstract_params(self, shardings=None):
+        return abstractify(self.specs, self.cfg.pdtype(), shardings)
+
+    def logical_axes(self):
+        return logical_axes(self.specs)
+
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.arch_type == "audio":
+        return Model(
+            cfg=cfg,
+            specs=encdec.param_specs(cfg),
+            loss_fn=lambda p, b: encdec.loss_fn(p, b, cfg),
+            logits_fn=lambda p, b: encdec.logits_fn(p, b, cfg),
+            init_cache=lambda B, S, abstract=False: encdec.init_cache(
+                cfg, B, S, abstract),
+            decode_step=lambda p, c, b, S: encdec.decode_step(p, c, b, cfg, S),
+            cache_logical=lambda: encdec.cache_logical(cfg),
+            prefill_cache=lambda p, b, B, S: encdec.prefill_cache(p, b, cfg, B, S),
+        )
+    return Model(
+        cfg=cfg,
+        specs=lm.param_specs(cfg),
+        loss_fn=lambda p, b: lm.loss_fn(p, b, cfg),
+        logits_fn=lambda p, b: lm.logits_fn(p, b, cfg),
+        init_cache=lambda B, S, abstract=False: lm.init_cache(cfg, B, S, abstract),
+        decode_step=lambda p, c, b, S: lm.decode_step(p, c, b, cfg, S),
+        cache_logical=lambda: lm.cache_logical(cfg),
+    )

@@ -1,0 +1,200 @@
+"""xLSTM blocks (mLSTM + sLSTM) [arXiv:2405.04517].
+
+mLSTM: matrix-memory LSTM — exponential input gate, sigmoid forget gate,
+running-max stabilizer and normalizer state. Computed with the shared
+chunkwise linear-attention engine (``stabilize=True, normalize=True``).
+
+sLSTM: scalar-memory recurrent cell with block-diagonal (per-head)
+recurrent weights — inherently sequential, computed with lax.scan over
+time (TPU adaptation note: the original CUDA kernel fuses the step; on TPU
+the scan body is a small fused VPU program, which is the idiomatic
+equivalent).
+
+Blocks alternate mLSTM/sLSTM (``cfg.slstm_every == 2``): the layer stack is
+scanned over *pairs* so scan params stay homogeneous.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import linear_attn as la
+from repro.models import ops
+from repro.models.blocks import _causal_conv
+from repro.models.param import ParamSpec
+
+
+def _dims(cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d        # mLSTM inner dim
+    H = cfg.n_heads
+    hp = di // H                   # mLSTM per-head value dim
+    return d, di, H, hp
+
+
+# --------------------------- mLSTM ----------------------------------------
+
+def mlstm_specs(cfg: ArchConfig, layers: int) -> dict:
+    d, di, H, hp = _dims(cfg)
+    L = (layers,)
+    return {
+        "norm": ParamSpec(L + (d,), ("layers", "embed"), init="ones"),
+        "w_up": ParamSpec(L + (d, 2 * di), ("layers", "fsdp", "mlp")),
+        "conv": ParamSpec(L + (cfg.ssm.conv_width, di),
+                          ("layers", "conv", "mlp"), init="normal", scale=0.5),
+        "wq": ParamSpec(L + (di, di), ("layers", "mlp", "heads")),
+        "wk": ParamSpec(L + (di, di), ("layers", "mlp", "heads")),
+        "wv": ParamSpec(L + (di, di), ("layers", "mlp", "heads")),
+        "w_if": ParamSpec(L + (di, 2 * H), ("layers", "mlp", "heads"),
+                          init="zeros"),
+        "b_if": ParamSpec(L + (2 * H,), ("layers", "heads"), init="zeros"),
+        "gnorm": ParamSpec(L + (di,), ("layers", "mlp"), init="ones"),
+        "w_down": ParamSpec(L + (di, d), ("layers", "mlp", "fsdp")),
+    }
+
+
+def _mlstm_inner(p, xm, cfg: ArchConfig):
+    """xm: (B,S,di) post-conv. Returns q,k,v,(ld,li) for the engine."""
+    B, S, di = xm.shape
+    d, _, H, hp = _dims(cfg)
+    q = jnp.einsum("bse,eh->bsh", xm, p["wq"].astype(xm.dtype)).reshape(B, S, H, hp)
+    k = jnp.einsum("bse,eh->bsh", xm, p["wk"].astype(xm.dtype)).reshape(B, S, H, hp)
+    k = k / (hp ** 0.5)
+    v = jnp.einsum("bse,eh->bsh", xm, p["wv"].astype(xm.dtype)).reshape(B, S, H, hp)
+    gates = (jnp.einsum("bse,eh->bsh", xm, p["w_if"].astype(xm.dtype))
+             .astype(jnp.float32) + p["b_if"].astype(jnp.float32))
+    li, f_raw = gates[..., :H], gates[..., H:]
+    ld = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, ld, li
+
+
+def mlstm_apply(p, h, cfg: ArchConfig):
+    B, S, d = h.shape
+    _, di, H, hp = _dims(cfg)
+    x = ops.rms_norm(h, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    xm, z = up[..., :di], up[..., di:]
+    xm = jax.nn.silu(_causal_conv(xm, p["conv"]).astype(jnp.float32)).astype(x.dtype)
+    q, k, v, ld, li = _mlstm_inner(p, xm, cfg)
+    y = la.chunked(q, k, v, ld, li, chunk=cfg.ssm.chunk,
+                   normalize=True, stabilize=True)
+    y = y.reshape(B, S, di)
+    y = ops.rms_norm(y, p["gnorm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return h + jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(x.dtype))
+
+
+class MLSTMCache(NamedTuple):
+    state: la.LinState
+    conv: jax.Array
+
+
+def mlstm_cache(cfg: ArchConfig, B):
+    d, di, H, hp = _dims(cfg)
+    return MLSTMCache(la.init_state(B, H, hp, hp),
+                      jnp.zeros((B, cfg.ssm.conv_width - 1, di), jnp.float32))
+
+
+def mlstm_decode(p, h, cfg: ArchConfig, cache: MLSTMCache):
+    B, _, d = h.shape
+    _, di, H, hp = _dims(cfg)
+    x = ops.rms_norm(h, p["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    xm, z = up[..., :di], up[..., di:]
+    hist = jnp.concatenate([cache.conv, xm.astype(jnp.float32)], axis=1)
+    xm1 = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist,
+                                 p["conv"].astype(jnp.float32)))
+    xm1 = xm1.astype(x.dtype)[:, None]                    # (B,1,di)
+    q, k, v, ld, li = _mlstm_inner(p, xm1, cfg)
+    st, y = la.decode_step(cache.state, q[:, 0], k[:, 0], v[:, 0],
+                           ld[:, 0], li[:, 0], normalize=True, stabilize=True)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = ops.rms_norm(y, p["gnorm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = h + jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(x.dtype))
+    return out, MLSTMCache(st, hist[:, 1:])
+
+
+# --------------------------- sLSTM ----------------------------------------
+
+def slstm_specs(cfg: ArchConfig, layers: int) -> dict:
+    d, _, H, _ = _dims(cfg)
+    hs = d // H                     # per-head scalar-memory width
+    fup = (8 * d) // 6              # post-block gated FFN (factor 4/3)
+    L = (layers,)
+    return {
+        "norm": ParamSpec(L + (d,), ("layers", "embed"), init="ones"),
+        "w_gates": ParamSpec(L + (d, 4 * d), ("layers", "fsdp", "mlp")),
+        "r_gates": ParamSpec(L + (H, hs, 4 * hs), ("layers", "heads", None, None),
+                             init="normal", scale=0.5),
+        "b_gates": ParamSpec(L + (4 * d,), ("layers", "mlp"), init="zeros"),
+        "gnorm": ParamSpec(L + (d,), ("layers", "embed"), init="ones"),
+        "up_norm": ParamSpec(L + (d,), ("layers", "embed"), init="ones"),
+        "w_up": ParamSpec(L + (d, 2 * fup), ("layers", "fsdp", "mlp")),
+        "w_down": ParamSpec(L + (fup, d), ("layers", "mlp", "fsdp")),
+    }
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, d)
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+
+
+def slstm_state(cfg: ArchConfig, B):
+    d = cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return SLSTMState(z, z, z, z)
+
+
+def _slstm_step(p, st: SLSTMState, wx_t, cfg: ArchConfig):
+    """wx_t: (B, 4d) precomputed input part. Returns (new state, h_out)."""
+    d, _, H, _ = _dims(cfg)
+    hs = d // H
+    B = wx_t.shape[0]
+    hprev = st.h.reshape(B, H, hs)
+    rec = jnp.einsum("bhs,hsg->bhg", hprev,
+                     p["r_gates"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = (wx_t + rec).reshape(B, 4, d)
+    li, lf_raw, z_raw, o_raw = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    lf = jax.nn.log_sigmoid(lf_raw)
+    m_new = jnp.maximum(lf + st.m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + st.m - m_new)
+    c = f_p * st.c + i_p * jnp.tanh(z_raw)
+    n = f_p * st.n + i_p
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(h, c, n, m_new), h
+
+
+def slstm_apply(p, hres, cfg: ArchConfig, state: SLSTMState = None):
+    B, S, d = hres.shape
+    x = ops.rms_norm(hres, p["norm"], cfg.norm_eps)
+    wx = (jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(x.dtype))
+          .astype(jnp.float32) + p["b_gates"].astype(jnp.float32))
+    st0 = state if state is not None else slstm_state(cfg, B)
+
+    def step(st, wx_t):
+        st2, h = _slstm_step(p, st, wx_t, cfg)
+        return st2, h
+
+    stN, ys = jax.lax.scan(step, st0, wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)             # (B,S,d)
+    y = ops.rms_norm(y, p["gnorm"], cfg.norm_eps)
+    h1 = hres + y
+    # gated up/down projection (xLSTM post-sLSTM FFN, factor 4/3)
+    x2 = ops.rms_norm(h1, p["up_norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", x2, p["w_up"].astype(x2.dtype))
+    a, b = jnp.split(up, 2, axis=-1)
+    hmid = jax.nn.gelu(a.astype(jnp.float32)).astype(x2.dtype) * b
+    out = h1 + jnp.einsum("bsf,fd->bsd", hmid, p["w_down"].astype(x2.dtype))
+    return (out, stN) if state is not None else out
+
+
+def slstm_decode(p, hres, cfg: ArchConfig, state: SLSTMState):
+    out, st = slstm_apply(p, hres, cfg, state=state)
+    return out, st

@@ -1,0 +1,62 @@
+"""Native Adam optimizer (pytree-level), plus the differential-replay form.
+
+Implements exactly Eq. (4) of the paper: ``M_{t+1} <- M_t + Adam(G_t)``
+where the model state M = (params, opt). The *same* ``adam_update``
+function serves (a) the training step and (b) checkpoint recovery replay
+(Algorithm 1, recovery process) — which is what makes Finding 1
+(compressed gradient == differential checkpoint) an exact identity in this
+system, not an approximation.
+
+Moments are stored in f32 regardless of the param dtype (mixed-precision
+policy); the update is computed in f32 and cast back.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    mu: Any       # first moment (f32 pytree)
+    nu: Any       # second moment (f32 pytree)
+    count: jax.Array
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(zeros, jax.tree.map(jnp.copy, zeros),
+                     jnp.zeros((), jnp.int32))
+
+
+def adam_update(params, grads, state: AdamState, *, lr=1e-3, b1=0.9,
+                b2=0.999, eps=1e-8, weight_decay=0.0,
+                grad_clip=0.0) -> Tuple[Any, AdamState]:
+    count = state.count + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * g * g
+        step = lr * (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), mu2, nu2
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    params2 = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    mu2 = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    nu2 = jax.tree.map(lambda t: t[2], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return params2, AdamState(mu2, nu2, count)

@@ -1,0 +1,126 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+Kernels execute in interpret mode on CPU — the exact TPU program body.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression import sparse as csp
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+SHAPES = [(1024,), (8, 1024), (33, 700), (5, 3, 257), (4096,), (1, 1)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_topk_kernel_matches_ref(shape, dtype):
+    x = _rand(shape, dtype)
+    sg_k = kops.topk_compress(x, 0.05, use_pallas=True)
+    sg_r = kops.topk_compress(x, 0.05, use_pallas=False)
+    # compare decompressed tensors (index order within a block may differ)
+    d_k = kops.topk_decompress(sg_k, use_pallas=True)
+    d_r = kops.topk_decompress(sg_r, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(d_k, np.float32),
+                               np.asarray(d_r, np.float32), atol=1e-6)
+    # and against the compression-library reference implementation
+    d_lib = csp.topk_decompress(csp.topk_compress(x, 0.05))
+    np.testing.assert_allclose(np.asarray(d_k, np.float32),
+                               np.asarray(d_lib, np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("rho", [0.001, 0.01, 0.1, 1.0])
+def test_topk_kernel_rho_sweep(rho):
+    x = _rand((16, 1024), jnp.float32, seed=3)
+    d_k = kops.topk_decompress(kops.topk_compress(x, rho, use_pallas=True))
+    d_r = csp.topk_decompress(csp.topk_compress(x, rho))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quant_kernel_matches_ref(shape, dtype):
+    x = _rand(shape, dtype, seed=1)
+    q_k, s_k = kops.quant_compress(x, use_pallas=True)
+    q_r, s_r = kops.quant_compress(x, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_adam_matches_ref(shape, dtype):
+    p = _rand(shape, dtype, seed=2)
+    g = _rand(shape, jnp.float32, seed=3)
+    mu = _rand(shape, jnp.float32, seed=4) * 0.1
+    nu = jnp.abs(_rand(shape, jnp.float32, seed=5)) * 0.1
+    hyper = kops.adam_hyper(1e-3, 0.9, 0.999, 1e-8, 3)
+    outs_k = kops.fused_adam_update(p, g, mu, nu, hyper, use_pallas=True)
+    outs_r = kops.fused_adam_update(p, g, mu, nu, hyper, use_pallas=False)
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-6, rtol=1e-5)
+
+
+def test_fused_adam_matches_optimizer():
+    """Kernel result == pytree Adam (the system's optimizer)."""
+    from repro.optim.adam import AdamState, adam_init, adam_update
+    p = {"w": _rand((600,), jnp.float32, seed=7)}
+    g = {"w": _rand((600,), jnp.float32, seed=8)}
+    st = adam_init(p)
+    p2, st2 = adam_update(p, g, st, lr=1e-3)
+    hyper = kops.adam_hyper(1e-3, 0.9, 0.999, 1e-8, 1)
+    pk, muk, nuk = kops.fused_adam_update(p["w"], g["w"], st.mu["w"],
+                                          st.nu["w"], hyper)
+    np.testing.assert_allclose(np.asarray(pk), np.asarray(p2["w"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(muk), np.asarray(st2.mu["w"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nuk), np.asarray(st2.nu["w"]), atol=1e-6)
+
+
+# ---------------------------- property tests -------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), rho=st.floats(0.001, 0.5), seed=st.integers(0, 99))
+def test_topk_roundtrip_preserves_selected(n, rho, seed):
+    """decompress(compress(x)) keeps selected entries exactly and zeroes
+    the rest; selected magnitudes dominate unselected ones per block."""
+    x = np.asarray(_rand((n,), jnp.float32, seed=seed))
+    sg = csp.topk_compress(jnp.asarray(x), rho)
+    d = np.asarray(csp.topk_decompress(sg))
+    nz = d != 0
+    np.testing.assert_allclose(d[nz], x[nz], atol=0)
+    # block-level dominance
+    block = sg.block
+    pad = (-n) % block
+    xp = np.pad(x, (0, pad)).reshape(-1, block)
+    dp = np.pad(d, (0, pad)).reshape(-1, block)
+    for xrow, drow in zip(xp, dp):
+        kept = drow != 0
+        if kept.any() and (~kept).any():
+            assert np.abs(xrow[kept]).min() >= np.abs(xrow[~kept]).max() - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 4000), seed=st.integers(0, 99))
+def test_quant_roundtrip_error_bound(n, seed):
+    """|dequant(quant(x)) - x| <= scale/2 per block (absmax int8)."""
+    x = np.asarray(_rand((n,), jnp.float32, seed=seed))
+    qg = __import__("repro.compression.quant", fromlist=["quant_compress"])
+    q = qg.quant_compress(jnp.asarray(x))
+    d = np.asarray(qg.quant_decompress(q))
+    scales = np.asarray(q.scale)
+    pad = (-n) % q.block
+    xp = np.pad(x, (0, pad)).reshape(-1, q.block)
+    dp = np.pad(d, (0, pad)).reshape(-1, q.block)
+    err = np.abs(xp - dp)
+    assert (err <= scales[:, None] / 2 + 1e-7).all()

@@ -1,0 +1,39 @@
+"""Failure-simulator sanity: orderings the paper's Exp. 3/9/10 establish."""
+import numpy as np
+
+from repro.core.simulator import StrategyProfile, paper_profiles, simulate
+
+
+def _run(name, profiles, mtbf, iters=20000, seeds=3):
+    rs = [simulate(profiles[name], run_iters=iters, mtbf_s=mtbf, seed=s)
+          for s in range(seeds)]
+    return float(np.mean([r.effective_ratio for r in rs]))
+
+
+def test_lowdiff_beats_baselines_under_failures():
+    profiles = paper_profiles(iter_time=0.5, full_bytes=8.7e9,
+                              diff_bytes=5.4e7, compress_stall=0.15)
+    mtbf = 1800.0
+    r = {k: _run(k, profiles, mtbf) for k in
+         ["full_sync", "checkfreq", "gemini", "naive_dc", "lowdiff",
+          "lowdiff_plus_s"]}
+    assert r["lowdiff"] > r["checkfreq"]
+    assert r["lowdiff"] > r["naive_dc"]
+    assert r["lowdiff_plus_s"] >= r["gemini"] - 0.01
+    assert r["lowdiff"] > 0.9
+
+
+def test_effective_ratio_decreases_with_failure_rate():
+    profiles = paper_profiles(iter_time=0.5, full_bytes=1.4e9,
+                              diff_bytes=9.2e6)
+    r_rare = _run("lowdiff", profiles, mtbf=7200)
+    r_freq = _run("lowdiff", profiles, mtbf=360)
+    assert r_rare > r_freq
+
+
+def test_no_failures_no_waste():
+    p = StrategyProfile("x", iter_time=0.1, ckpt_overhead=0.0,
+                        ckpt_interval=1, restore_time=1.0)
+    r = simulate(p, run_iters=1000, mtbf_s=1e12, seed=0)
+    assert r.failures == 0
+    assert abs(r.wasted_time) < 1e-6
