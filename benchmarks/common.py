@@ -8,6 +8,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.checkpoint import make_store
 from repro.checkpoint.store import CheckpointStore
 from repro.configs import get_config
 from repro.core.steps import init_state, make_train_step
@@ -36,9 +37,10 @@ def timeit(fn: Callable, *, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts))
 
 
-def fresh_store(path: str) -> CheckpointStore:
+def fresh_store(path: str, backend: str = "local",
+                **kw) -> CheckpointStore:
     shutil.rmtree(path, ignore_errors=True)
-    return CheckpointStore(path)
+    return make_store(path, backend=backend, **kw)
 
 
 def measured_iter_time(model, steps: int = 6) -> float:

@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Run with::
 
-    PYTHONPATH=src python -m benchmarks.run [--only exp5]
+    PYTHONPATH=src python -m benchmarks.run [--only exp5] [--json out.json]
+
+``--json`` additionally writes the rows (plus per-module wall time and
+failure status) as a JSON document — CI uploads this as the benchmark
+smoke artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -30,23 +35,43 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (CI artifact)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    results = []
     failures = 0
     for name, modname in MODULES:
         if args.only and args.only not in name:
             continue
+        rows: list = []
+
+        def out(row, _rows=rows):
+            _rows.append(str(row))
+            print(row)
+
         t0 = time.time()
         try:
             mod = __import__(modname, fromlist=["main"])
-            mod.main(print)
+            mod.main(out)
+            status = "ok"
             print(f"# {name} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)
         except Exception:
             failures += 1
+            status = "failed"
             print(f"# {name} FAILED", file=sys.stderr)
             traceback.print_exc()
+        results.append({"benchmark": name, "module": modname,
+                        "status": status,
+                        "seconds": round(time.time() - t0, 3),
+                        "rows": rows})
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as f:
+            json.dump({"schema": "repro-bench/v1", "results": results}, f,
+                      indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark modules failed")
 

@@ -12,7 +12,7 @@ import shutil
 import jax
 import numpy as np
 
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint import make_store
 from repro.configs import get_config
 from repro.core.lowdiff import LowDiff
 from repro.core.steps import init_state
@@ -28,7 +28,8 @@ def main():
     model = build_model(cfg)
     print(f"model: {cfg.name} ({model.n_params() / 1e6:.1f}M params)")
 
-    store = CheckpointStore(CKPT_DIR)
+    # backend="sharded" / "memory" select the other storage tiers
+    store = make_store(CKPT_DIR, backend="local", retention_fulls=2)
     lowdiff = LowDiff(model, store, rho=0.01, lr=1e-3,
                       full_interval=10, batch_size=2)
     state = init_state(model, jax.random.PRNGKey(0))

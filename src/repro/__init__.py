@@ -1,0 +1,4 @@
+"""LowDiff reproduction: frequent differential checkpointing for
+distributed training (jax/pallas)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,1 @@
+"""Roofline / HLO cost analysis of the sharded training step."""

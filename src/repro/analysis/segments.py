@@ -335,13 +335,22 @@ def segments_for(model, shape: ShapeConfig) -> List[Segment]:
 # lowering + accounting
 # --------------------------------------------------------------------------
 
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """jax >= 0.5 returns one dict; jax <= 0.4.x one dict per device."""
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
 def measure_segment(seg: Segment) -> Dict[str, float]:
     ops.set_analysis_unroll(True)
     try:
         compiled = jax.jit(seg.fn).lower(*seg.args).compile()
     finally:
         ops.set_analysis_unroll(False)
-    ca = compiled.cost_analysis() or {}
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(ca.get("flops", 0.0)),
             "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -1,0 +1,31 @@
+"""Checkpoint storage engine: chain store + pluggable backends.
+
+``make_store`` is the one-stop factory used by the launcher, examples
+and benchmarks to select a backend by name::
+
+    store = make_store("/tmp/ck", backend="sharded", shards=8,
+                       retention_fulls=2)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.checkpoint.backends import (BACKENDS, LocalFSBackend,
+                                       MemoryTierBackend, ShardedBackend,
+                                       StorageBackend, make_backend,
+                                       make_pspec_splitter)
+from repro.checkpoint.store import CheckpointStore
+
+__all__ = ["BACKENDS", "CheckpointStore", "LocalFSBackend",
+           "MemoryTierBackend", "ShardedBackend", "StorageBackend",
+           "make_backend", "make_pspec_splitter", "make_store"]
+
+
+def make_store(root: Optional[str], *, backend: str = "local",
+               shards: int = 4, capacity_mb: Optional[float] = None,
+               retention_fulls: int = 0,
+               compact_every: int = 256) -> CheckpointStore:
+    """Build a CheckpointStore over the named backend."""
+    be = make_backend(backend, root, shards=shards, capacity_mb=capacity_mb)
+    return CheckpointStore(root, backend=be, retention_fulls=retention_fulls,
+                           compact_every=compact_every)

@@ -108,13 +108,28 @@ def _get(i: int, arrays):
     return arrays[f"a{i}"]
 
 
-def save(path: str, obj: Any) -> int:
-    """Atomic write. Returns bytes written."""
+def pack(obj: Any) -> Tuple[dict, List[np.ndarray]]:
+    """Encode obj into (JSON-able structure, flat host-array list).
+
+    bf16 leaves are stored as uint16 views and referenced by negative
+    index in the structure (see ``_arr``); everything else by its
+    position in the list. The inverse is :func:`unpack`.
+    """
     arrays: List[np.ndarray] = []
     struct = _pack(obj, arrays)
-    payload = {f"a{i}": a for i, a in enumerate(arrays)}
-    payload["__struct__"] = np.frombuffer(
-        json.dumps(struct).encode(), dtype=np.uint8)
+    return struct, arrays
+
+
+def unpack(struct: dict, arrays) -> Any:
+    """Inverse of :func:`pack`. ``arrays`` is any mapping with keys
+    ``a0..aN`` (an open npz file works) or a plain list."""
+    if isinstance(arrays, (list, tuple)):
+        arrays = {f"a{i}": a for i, a in enumerate(arrays)}
+    return _unpack(struct, arrays)
+
+
+def save_npz(path: str, payload: Dict[str, np.ndarray]) -> int:
+    """Atomic + fsync'd raw npz write. Returns bytes written."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".tmp")
@@ -129,6 +144,21 @@ def save(path: str, obj: Any) -> int:
             os.unlink(tmp)
         raise
     return os.path.getsize(path)
+
+
+def load_npz(path: str) -> Dict[str, np.ndarray]:
+    """Fully materialize an npz written by :func:`save_npz`."""
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def save(path: str, obj: Any) -> int:
+    """Atomic write. Returns bytes written."""
+    struct, arrays = pack(obj)
+    payload = {f"a{i}": a for i, a in enumerate(arrays)}
+    payload["__struct__"] = np.frombuffer(
+        json.dumps(struct).encode(), dtype=np.uint8)
+    return save_npz(path, payload)
 
 
 def load(path: str) -> Any:

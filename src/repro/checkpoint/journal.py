@@ -1,0 +1,192 @@
+"""Append-only manifest journal with periodic compaction.
+
+The seed store rewrote the whole ``manifest.json`` on every record —
+O(n) bytes per write, O(n²) over a training run, exactly the failure
+mode per-iteration checkpointing provokes. This journal appends one
+JSON line per mutation (O(1) bytes per write) and periodically folds
+the log into an atomic snapshot.
+
+On-disk layout::
+
+    <root>/manifest.json   # snapshot {"fulls": [...], ..., "__seq__": n}
+    <root>/manifest.log    # JSON lines appended after the snapshot
+
+Records::
+
+    {"seq": 7, "op": "add", "kind": "fulls",  "entry": {...}}
+    {"seq": 8, "op": "del", "kind": "batches", "key": "batch_..."}
+
+Recovery reads the snapshot, then replays log records with
+``seq > snapshot.__seq__``. A torn tail (partial last line from a
+crash mid-append) is detected by the JSON parse failing and the valid
+prefix is kept — recovery always sees a consistent chain prefix.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional
+
+EMPTY = {"fulls": [], "diffs": [], "batches": []}
+
+
+def _blank() -> Dict[str, List[dict]]:
+    return {k: [] for k in EMPTY}
+
+
+class MemoryJournal:
+    """Journal interface for backends with no durable root (pure
+    CPU-memory tier): the manifest lives only in this process."""
+
+    def __init__(self):
+        self.manifest = _blank()
+        self.appends = 0
+
+    def append(self, op: str, kind: str, *, entry: Optional[dict] = None,
+               key: Optional[str] = None) -> int:
+        _apply(self.manifest, op, kind, entry, key)
+        self.appends += 1
+        return 0  # no bytes hit storage
+
+    def compact(self):
+        pass
+
+    def close(self):
+        pass
+
+    def stats(self):
+        return {"appends": self.appends, "log_bytes": 0, "compactions": 0}
+
+
+class ManifestJournal:
+    SNAPSHOT = "manifest.json"
+    LOG = "manifest.log"
+
+    def __init__(self, root: str, compact_every: int = 256):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.compact_every = compact_every
+        self.compactions = 0
+        self.appends = 0
+        self._seq = 0
+        self._since_compact = 0
+        self.manifest = self._load()
+        self._log = open(self._log_path(), "a", encoding="utf-8")
+
+    # ------------------------------------------------------------------
+    def _snap_path(self) -> str:
+        return os.path.join(self.root, self.SNAPSHOT)
+
+    def _log_path(self) -> str:
+        return os.path.join(self.root, self.LOG)
+
+    def _load(self) -> Dict[str, List[dict]]:
+        manifest = _blank()
+        if os.path.exists(self._snap_path()):
+            with open(self._snap_path(), encoding="utf-8") as f:
+                snap = json.load(f)
+            self._seq = int(snap.pop("__seq__", 0))
+            for k in manifest:
+                manifest[k] = list(snap.get(k, []))
+        if os.path.exists(self._log_path()):
+            valid_bytes = 0
+            with open(self._log_path(), "rb") as f:
+                for raw in f:
+                    if not raw.endswith(b"\n"):
+                        break  # newline missing: the append was torn
+                    try:
+                        rec = json.loads(raw.decode("utf-8"))
+                    except (json.JSONDecodeError, UnicodeDecodeError):
+                        break  # torn tail: keep the valid prefix
+                    valid_bytes += len(raw)
+                    if rec.get("seq", 0) <= self._seq:
+                        continue  # already folded into the snapshot
+                    _apply(manifest, rec["op"], rec["kind"],
+                           rec.get("entry"), rec.get("key"))
+                    self._seq = rec["seq"]
+            if valid_bytes < os.path.getsize(self._log_path()):
+                # drop the torn fragment so the next append starts a
+                # fresh line instead of merging into it (which would
+                # poison every later record on the following reload)
+                with open(self._log_path(), "r+b") as f:
+                    f.truncate(valid_bytes)
+        return manifest
+
+    # ------------------------------------------------------------------
+    def append(self, op: str, kind: str, *, entry: Optional[dict] = None,
+               key: Optional[str] = None) -> int:
+        """Apply a mutation and append one JSON line. Returns the number
+        of journal bytes written — O(entry), independent of history."""
+        _apply(self.manifest, op, kind, entry, key)
+        self._seq += 1
+        rec = {"seq": self._seq, "op": op, "kind": kind}
+        if entry is not None:
+            rec["entry"] = entry
+        if key is not None:
+            rec["key"] = key
+        line = json.dumps(rec) + "\n"
+        self._log.write(line)
+        self._log.flush()
+        self.appends += 1
+        self._since_compact += 1
+        if self._since_compact >= self.compact_every:
+            self.compact()
+        return len(line)
+
+    def compact(self):
+        """Fold the log into an atomic snapshot and truncate it."""
+        snap = dict(self.manifest)
+        snap["__seq__"] = self._seq
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump(snap, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._snap_path())
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        # Snapshot is durable; a crash before the truncate just replays
+        # records whose seq <= __seq__, which _load skips.
+        self._log.close()
+        self._log = open(self._log_path(), "w", encoding="utf-8")
+        self._since_compact = 0
+        self.compactions += 1
+
+    def close(self):
+        if not self._log.closed:
+            self._log.close()
+
+    def log_bytes(self) -> int:
+        try:
+            return os.path.getsize(self._log_path())
+        except OSError:
+            return 0
+
+    def stats(self):
+        return {"appends": self.appends, "log_bytes": self.log_bytes(),
+                "compactions": self.compactions}
+
+
+def _entry_key(e: dict) -> Optional[str]:
+    key = e.get("key")
+    if key is None and "path" in e:  # pre-journal entries carried paths only
+        key = os.path.basename(e["path"])
+        if key.endswith(".npz"):
+            key = key[:-4]
+    return key
+
+
+def _apply(manifest: Dict[str, List[dict]], op: str, kind: str,
+           entry: Optional[dict], key: Optional[str]):
+    if kind not in manifest:
+        manifest[kind] = []
+    if op == "add":
+        manifest[kind].append(entry)
+    elif op == "del":
+        manifest[kind] = [e for e in manifest[kind] if _entry_key(e) != key]
+    else:
+        raise ValueError(f"unknown journal op {op!r}")

@@ -1,108 +1,194 @@
-"""Checkpoint directory layout + manifest for full/differential chains.
+"""Checkpoint chain store: full/diff/batch semantics over any backend.
 
-Layout::
+The store maps the paper's checkpoint chain (full model states,
+per-iteration differentials, batched differentials) onto a pluggable
+:class:`repro.checkpoint.backends.StorageBackend` and keeps the index in
+an append-only :class:`repro.checkpoint.journal.ManifestJournal` —
+O(1) journal bytes per write instead of the seed's full
+``manifest.json`` rewrite, with periodic compaction.
 
-    <dir>/manifest.json                      # index of everything below
-    <dir>/full_00000010.npz                  # model state M_t
-    <dir>/diff_00000011.npz                  # one differential (G̃_t)
-    <dir>/batch_00000012_00000015.npz        # batched differentials
+Keys (backend-independent)::
 
-The manifest is rewritten atomically after each successful write, so
-recovery always sees a consistent chain prefix.
+    full_00000010                # model state M_t
+    diff_00000011                # one differential (G̃_t)
+    batch_00000012_00000015      # batched differentials
+
+Chain-aware garbage collection (`gc`) deletes full checkpoints and
+differential blobs superseded by a newer full, keeping
+``retention_fulls`` fulls plus everything needed to replay the latest
+chain — Check-N-Run-style quota management for differential chains.
 """
 from __future__ import annotations
 
-import json
 import os
-import tempfile
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.checkpoint import io as cio
+from repro.checkpoint.backends import LocalFSBackend, StorageBackend
+from repro.checkpoint.journal import (ManifestJournal, MemoryJournal,
+                                      _entry_key)
 
 
 class CheckpointStore:
-    def __init__(self, root: str):
-        self.root = root
-        os.makedirs(root, exist_ok=True)
-        self._lock = threading.Lock()
-        self.manifest: Dict[str, Any] = {"fulls": [], "diffs": [], "batches": []}
-        self._load_manifest()
+    def __init__(self, root: Optional[str] = None, *,
+                 backend: Optional[StorageBackend] = None,
+                 retention_fulls: int = 0, compact_every: int = 256):
+        if backend is None:
+            if root is None:
+                raise ValueError("CheckpointStore needs a root or a backend")
+            backend = LocalFSBackend(root)
+        self.backend = backend
+        self.root = root if root is not None else backend.persist_root
+        self.retention_fulls = retention_fulls
+        self._lock = threading.RLock()
+        if backend.persist_root is not None:
+            self.journal = ManifestJournal(backend.persist_root,
+                                           compact_every=compact_every)
+        else:
+            self.journal = MemoryJournal()
         self.bytes_written = 0
         self.writes = 0
+        self.gc_deleted = 0
+        self._prune_missing()
 
     # ------------------------------------------------------------------
-    def _manifest_path(self):
-        return os.path.join(self.root, "manifest.json")
-
-    def _load_manifest(self):
-        if os.path.exists(self._manifest_path()):
-            with open(self._manifest_path()) as f:
-                self.manifest = json.load(f)
-
-    def _write_manifest(self):
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(self.manifest, f)
-        os.replace(tmp, self._manifest_path())
+    @property
+    def manifest(self) -> Dict[str, List[dict]]:
+        return self.journal.manifest
 
     def _record(self, kind: str, entry: dict, nbytes: int):
         with self._lock:
-            self.manifest[kind].append(entry)
+            self.journal.append("add", kind, entry=entry)
             self.bytes_written += nbytes
             self.writes += 1
-            self._write_manifest()
 
     # ------------------------------------------------------------------
     def save_full(self, step: int, state) -> str:
-        path = os.path.join(self.root, f"full_{step:08d}.npz")
-        n = cio.save(path, state)
-        self._record("fulls", {"step": step, "path": path, "bytes": n}, n)
-        return path
+        key = f"full_{step:08d}"
+        n = self.backend.put(key, state)
+        self._record("fulls", {"step": step, "key": key,
+                               "path": self.backend.url(key), "bytes": n}, n)
+        if self.retention_fulls:
+            self.gc()
+        return key
 
     def save_diff(self, step: int, payload) -> str:
-        path = os.path.join(self.root, f"diff_{step:08d}.npz")
-        n = cio.save(path, payload)
-        self._record("diffs", {"step": step, "path": path, "bytes": n}, n)
-        return path
+        key = f"diff_{step:08d}"
+        n = self.backend.put(key, payload)
+        self._record("diffs", {"step": step, "key": key,
+                               "path": self.backend.url(key), "bytes": n}, n)
+        return key
 
     def save_batch(self, first: int, last: int, payloads: list,
                    mode: str = "concat") -> str:
         """One I/O operation carrying differentials [first..last]."""
-        path = os.path.join(self.root, f"batch_{first:08d}_{last:08d}.npz")
-        n = cio.save(path, {"mode": mode, "first": first, "last": last,
-                            "payloads": payloads})
-        self._record("batches", {"first": first, "last": last, "path": path,
+        key = f"batch_{first:08d}_{last:08d}"
+        n = self.backend.put(key, {"mode": mode, "first": first,
+                                   "last": last, "payloads": payloads})
+        self._record("batches", {"first": first, "last": last, "key": key,
+                                 "path": self.backend.url(key),
                                  "bytes": n}, n)
-        return path
+        return key
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _entry_key(entry: dict) -> str:
+        return _entry_key(entry)
+
+    def _prune_missing(self):
+        """Drop manifest entries whose blob never became durable — e.g. a
+        crash after the journal append but before an async tier's
+        write-back landed. Write-back is FIFO, so the missing blobs are a
+        suffix of the write order and pruning restores the seed's
+        guarantee: recovery always sees a consistent chain prefix."""
+        with self._lock:
+            for kind in ("fulls", "diffs", "batches"):
+                for e in list(self.manifest[kind]):
+                    key = self._entry_key(e)
+                    if not self.backend.exists(key):
+                        self.journal.append("del", kind, key=key)
+
     def latest_full(self) -> Optional[dict]:
-        fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"])
+        with self._lock:
+            fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"])
         return fulls[-1] if fulls else None
 
     def load_full(self, entry: dict):
-        return cio.load(entry["path"])
+        return self.backend.get(self._entry_key(entry))
 
     def diffs_after(self, step: int) -> List[Tuple[int, Any]]:
-        """Ordered (step, payload) list of differentials with step > given."""
+        """Ordered (step, payload) list of differentials with step > given.
+        Non-overlapping batches are skipped without touching storage."""
+        with self._lock:
+            diffs = list(self.manifest["diffs"])
+            batches = list(self.manifest["batches"])
         out = []
-        for e in self.manifest["diffs"]:
+        for e in diffs:
             if e["step"] > step:
-                out.append((e["step"], cio.load(e["path"])))
-        for e in self.manifest["batches"]:
-            blob = None
-            if e["last"] > step:
-                blob = cio.load(e["path"])
-                for i, pay in enumerate(blob["payloads"]):
-                    s = blob["first"] + i
-                    if s > step:
-                        out.append((s, pay))
+                out.append((e["step"], self.backend.get(self._entry_key(e))))
+        for e in batches:
+            if e["last"] <= step:
+                continue
+            blob = self.backend.get(self._entry_key(e))
+            for i, pay in enumerate(blob["payloads"]):
+                s = blob["first"] + i
+                if s > step:
+                    out.append((s, pay))
         out.sort(key=lambda t: t[0])
         return out
 
+    # ------------------------------------------------------------------
+    def gc(self, retention_fulls: Optional[int] = None) -> Dict[str, int]:
+        """Delete blobs superseded by a newer full checkpoint.
+
+        Keeps the newest ``retention_fulls`` fulls and every
+        differential/batch that could still be needed to replay a chain
+        from the *oldest retained* full (a batch straddling the cutoff
+        is kept whole). Returns per-kind delete counts.
+        """
+        keep = (self.retention_fulls if retention_fulls is None
+                else retention_fulls)
+        if keep < 1:
+            return {}
+        removed = {"fulls": 0, "diffs": 0, "batches": 0}
+        with self._lock:
+            fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"])
+            if len(fulls) <= keep:
+                return removed
+            cutoff = fulls[-keep]["step"]
+            doomed: List[Tuple[str, dict]] = []
+            for e in fulls[:-keep]:
+                doomed.append(("fulls", e))
+            for e in self.manifest["diffs"]:
+                if e["step"] <= cutoff:
+                    doomed.append(("diffs", e))
+            for e in self.manifest["batches"]:
+                if e["last"] <= cutoff:
+                    doomed.append(("batches", e))
+            for kind, e in doomed:
+                key = self._entry_key(e)
+                self.journal.append("del", kind, key=key)
+                self.backend.delete(key)
+                removed[kind] += 1
+                self.gc_deleted += 1
+        return removed
+
+    # ------------------------------------------------------------------
+    def flush(self):
+        """Block until every accepted write is durable at the lowest
+        backend tier."""
+        self.backend.flush()
+
+    def close(self):
+        self.backend.close()
+        self.journal.close()
+
     def stats(self):
-        return {"writes": self.writes, "bytes": self.bytes_written,
-                "fulls": len(self.manifest["fulls"]),
-                "diffs": len(self.manifest["diffs"]),
-                "batches": len(self.manifest["batches"])}
+        with self._lock:
+            return {"writes": self.writes, "bytes": self.bytes_written,
+                    "fulls": len(self.manifest["fulls"]),
+                    "diffs": len(self.manifest["diffs"]),
+                    "batches": len(self.manifest["batches"]),
+                    "gc_deleted": self.gc_deleted,
+                    "journal": self.journal.stats(),
+                    "backend": self.backend.stats()}

@@ -47,9 +47,11 @@ class _Base:
         for f in self._pending:
             f.result()
         self._pending.clear()
+        self.store.flush()
 
     def close(self):
         self.flush()
+        self.store.close()
 
     def recover(self):
         entry = self.store.latest_full()
@@ -172,12 +174,9 @@ class NaiveDC(_Base):
         return state, metrics
 
     def recover(self):
-        entry = self.store.latest_full()
-        if entry is None:
-            raise FileNotFoundError("no checkpoint")
-        state = self.store.load_full(entry)
-        diffs = self.store.diffs_after(entry["step"])
-        from repro.core.recovery import merge_deltas_pairwise
+        from repro.core.recovery import load_latest_chain, \
+            merge_deltas_pairwise
+        state, diffs = load_latest_chain(self.store)
         if diffs:
             deltas = [decompress_tree(p) for _, p in diffs]
             merged, _ = merge_deltas_pairwise(deltas)

@@ -126,13 +126,15 @@ class LowDiff:
         self.store.save_full(step, snap)
 
     def flush(self):
-        """Block until every queued differential/full write is durable."""
+        """Block until every queued differential/full write is durable
+        (including the storage backend's own async tiers)."""
         while self._processed < self.queue.enqueued:
             time.sleep(0.005)
         self._flush_batch()
         for f in self._pending:
             f.result()
         self._pending.clear()
+        self.store.flush()
 
     def close(self):
         self.flush()
@@ -140,17 +142,16 @@ class LowDiff:
         self.queue.close()
         if self._consumer is not None:
             self._consumer.join(timeout=5)
+        self.store.close()
 
     # ------------------------------------------------------------------
     # recovery process
     # ------------------------------------------------------------------
     def recover(self):
-        """Returns (state, replayed_steps). Raises if no checkpoint."""
-        entry = self.store.latest_full()
-        if entry is None:
-            raise FileNotFoundError("no full checkpoint")
-        state = self.store.load_full(entry)
-        diffs = self.store.diffs_after(entry["step"])
+        """Returns (state, replayed_steps). Raises if no checkpoint.
+        Works against any storage backend — the chain loader delegates
+        shard re-assembly / tier lookup to the store's backend."""
+        state, diffs = rec.load_latest_chain(self.store)
         replay = (rec.replay_parallel if self.parallel_recovery
                   else rec.replay_serial)
         params, opt = replay(state["params"], state["opt"], diffs, lr=self.lr)

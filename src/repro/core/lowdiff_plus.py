@@ -167,6 +167,7 @@ class LowDiffPlus:
         for f in self._pending:
             f.result()
         self._pending.clear()
+        self.store.flush()
 
     def close(self):
         self.flush()
@@ -174,6 +175,7 @@ class LowDiffPlus:
         self.queue.close()
         if self._consumer is not None:
             self._consumer.join(timeout=5)
+        self.store.close()
 
     # ------------------------------------------------------------------
     def recover_software(self, template_state):

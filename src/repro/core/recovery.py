@@ -25,6 +25,19 @@ from repro.compression.sparse import SparseGrad, decompress_tree
 from repro.optim.adam import AdamState, adam_update
 
 
+def load_latest_chain(store):
+    """Load the newest full checkpoint and the ordered differentials
+    after it from whatever storage backend the store wraps (the backend
+    re-assembles sharded leaves / hits the memory tier transparently).
+    Returns (state, [(step, payload), ...]); raises FileNotFoundError
+    when no full checkpoint exists."""
+    entry = store.latest_full()
+    if entry is None:
+        raise FileNotFoundError("no full checkpoint")
+    state = store.load_full(entry)
+    return state, store.diffs_after(entry["step"])
+
+
 def _is_compressed(x):
     from repro.compression.quant import QuantGrad
     return isinstance(x, (SparseGrad, QuantGrad))

@@ -1,0 +1,1 @@
+"""Synthetic token streams for deterministic training runs."""

@@ -1,0 +1,1 @@
+"""Mesh/partition-spec machinery and the sharded step builder."""

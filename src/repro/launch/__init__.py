@@ -1,0 +1,1 @@
+"""Entry points: training driver, serving, mesh construction, dryrun."""

@@ -15,18 +15,25 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kw(n: int) -> dict:
+    """jax >= 0.5 takes axis_types in make_mesh; older releases don't
+    have jax.sharding.AxisType at all (Auto is then the only behavior)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kw(len(axes)))
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **_axis_type_kw(2))
 
 
 # Hardware constants (TPU v5e) used by the roofline analysis.

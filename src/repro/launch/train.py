@@ -20,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint import BACKENDS, make_store
 from repro.configs import get_config
 from repro.core.baselines import CheckFreq, FullSync, Gemini, NaiveDC
 from repro.core.config_opt import SystemParams
@@ -64,7 +64,12 @@ def run(args):
           f"strategy={args.strategy}")
     if args.clean and args.ckpt_dir:
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
-    store = CheckpointStore(args.ckpt_dir) if args.ckpt_dir else None
+    store = (make_store(args.ckpt_dir,
+                        backend=getattr(args, "backend", "local"),
+                        shards=getattr(args, "shards", 4),
+                        capacity_mb=getattr(args, "memory_capacity_mb", None),
+                        retention_fulls=getattr(args, "retention", 0))
+             if args.ckpt_dir else None)
     strat = (build_strategy(args.strategy, model, store, lr=args.lr,
                             rho=args.rho, full_interval=args.full_interval,
                             batch_size=args.batch_size)
@@ -104,6 +109,8 @@ def run(args):
     wall = time.perf_counter() - t_start
     if strat is not None:
         strat.close()
+    elif store is not None:
+        store.close()
     print(f"\n{args.steps} steps in {wall:.1f}s "
           f"(mean iter {np.mean(times) * 1e3:.1f}ms, "
           f"p50 {np.percentile(times, 50) * 1e3:.1f}ms)")
@@ -128,6 +135,16 @@ def main():
     ap.add_argument("--batch-size", type=int, default=2,
                     help="differential batching size b")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--backend", choices=BACKENDS, default="local",
+                    help="checkpoint storage backend (local FS, CPU-memory "
+                         "tier with async spill, or sharded concurrent)")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for --backend sharded")
+    ap.add_argument("--memory-capacity-mb", type=float, default=None,
+                    help="RAM-tier byte budget for --backend memory")
+    ap.add_argument("--retention", type=int, default=0,
+                    help="keep this many full checkpoints + their chains "
+                         "(0 = never garbage-collect)")
     ap.add_argument("--clean", action="store_true", default=True)
     ap.add_argument("--fail-at", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

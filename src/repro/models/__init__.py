@@ -1,0 +1,1 @@
+"""Model zoo (10 reduced-config architectures) and registry."""

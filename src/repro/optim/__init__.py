@@ -1,0 +1,1 @@
+"""Native Adam with the affine moment recurrences recovery exploits."""

@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional property-testing dep; never hard-fail collection
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.compression import sparse as csp
 from repro.kernels import ops as kops
@@ -89,8 +94,25 @@ def test_fused_adam_matches_optimizer():
 
 # ---------------------------- property tests -------------------------------
 
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 5000), rho=st.floats(0.001, 0.5), seed=st.integers(0, 99))
+def _hyp(**kw):
+    """@given-or-parametrize: hypothesis strategies when the optional
+    dep is installed, a fixed case sweep otherwise. Each kwarg maps a
+    parameter name to ((strategy_name, *args), fallback_values)."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            strategies = {k: getattr(st, spec[0])(*spec[1:])
+                          for k, (spec, _) in kw.items()}
+            return settings(max_examples=25, deadline=None)(
+                given(**strategies)(fn))
+        names = ",".join(kw)
+        cases = list(zip(*(fb for _, fb in kw.values())))
+        return pytest.mark.parametrize(names, cases)(fn)
+    return deco
+
+
+@_hyp(n=(("integers", 1, 5000), [1, 37, 1024, 5000]),
+      rho=(("floats", 0.001, 0.5), [0.5, 0.01, 0.1, 0.001]),
+      seed=(("integers", 0, 99), [0, 1, 2, 3]))
 def test_topk_roundtrip_preserves_selected(n, rho, seed):
     """decompress(compress(x)) keeps selected entries exactly and zeroes
     the rest; selected magnitudes dominate unselected ones per block."""
@@ -110,8 +132,8 @@ def test_topk_roundtrip_preserves_selected(n, rho, seed):
             assert np.abs(xrow[kept]).min() >= np.abs(xrow[~kept]).max() - 1e-6
 
 
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(1, 4000), seed=st.integers(0, 99))
+@_hyp(n=(("integers", 1, 4000), [1, 65, 1023, 4000]),
+      seed=(("integers", 0, 99), [0, 1, 2, 3]))
 def test_quant_roundtrip_error_bound(n, seed):
     """|dequant(quant(x)) - x| <= scale/2 per block (absmax int8)."""
     x = np.asarray(_rand((n,), jnp.float32, seed=seed))

@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional property-testing dep; never hard-fail collection
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.checkpoint.store import CheckpointStore
 from repro.configs import get_config
@@ -44,10 +49,7 @@ def test_closed_form_matches_grid():
     assert abs(np.log(b_star / b_g)) < 0.05
 
 
-@settings(max_examples=30, deadline=None)
-@given(M=st.floats(100, 1e5), W=st.floats(1e8, 1e11), S=st.floats(1e7, 1e11),
-       R_D=st.floats(0.01, 10))
-def test_closed_form_is_stationary(M, W, S, R_D):
+def _stationary_body(M, W, S, R_D):
     """(f*, b*) zeroes both partial derivatives of Eq. (8)."""
     p = co.SystemParams(M=M, W=W, S=S, R_D=R_D)
     f, b = co.optimal_config(p)
@@ -57,6 +59,20 @@ def test_closed_form_is_stationary(M, W, S, R_D):
     w0 = co.wasted_time(f, b, p)
     assert abs(dfd) / w0 < 1e-4
     assert abs(dbd) / w0 < 1e-4
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(M=st.floats(100, 1e5), W=st.floats(1e8, 1e11),
+           S=st.floats(1e7, 1e11), R_D=st.floats(0.01, 10))
+    def test_closed_form_is_stationary(M, W, S, R_D):
+        _stationary_body(M, W, S, R_D)
+else:
+    @pytest.mark.parametrize("M,W,S,R_D", [
+        (1800.0, 5e9, 8.7e9, 0.4), (3600.0, 1e10, 1.4e9, 0.3),
+        (500.0, 2e8, 5e7, 2.0)])
+    def test_closed_form_is_stationary(M, W, S, R_D):
+        _stationary_body(M, W, S, R_D)
 
 
 def test_table1_shape():

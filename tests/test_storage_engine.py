@@ -1,0 +1,411 @@
+"""Storage-engine tests: backend parity, journal, GC, sharded recovery.
+
+Covers the acceptance criteria of the pluggable storage subsystem:
+  * save/load round-trip parity across LocalFS / MemoryTier / Sharded
+  * the manifest journal appends O(1) bytes per write, compacts, and
+    survives torn tails (crash mid-append)
+  * chain-aware GC never deletes a blob still needed to replay the
+    latest chain
+  * a LowDiff run persisted through ShardedBackend recovers params/opt
+    bit-identical to the same run through LocalFSBackend
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+import ml_dtypes
+
+from repro.checkpoint import make_store
+from repro.checkpoint.backends import (LocalFSBackend, MemoryTierBackend,
+                                       ShardedBackend, make_pspec_splitter)
+from repro.checkpoint.store import CheckpointStore
+from repro.compression.sparse import SparseGrad
+from repro.configs import get_config
+from repro.core.lowdiff import LowDiff
+from repro.core.steps import init_state
+from repro.data.synthetic import make_batch
+from repro.models.registry import build_model
+
+SEQ, BATCH = 32, 2
+
+
+def sample_tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.normal(size=(48, 260)).astype(np.float32),
+        "bf16": rng.normal(size=(1024,)).astype(ml_dtypes.bfloat16),
+        "ints": np.arange(11, dtype=np.int32),
+        "sparse": SparseGrad(
+            values=np.float32(rng.normal(size=(4, 10))),
+            indices=np.int32(rng.integers(0, 1024, size=(4, 10))),
+            shape=(4096,), block=1024),
+        "nested": {"a": [np.float32(1.5), (2, 3)], "b": None,
+                   "c": "label", "d": True},
+    }
+
+
+def assert_tree_identical(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if isinstance(x, (np.ndarray, jax.Array)) or hasattr(x, "dtype"):
+            x, y = np.asarray(x), np.asarray(y)
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(x, y)
+        else:
+            assert x == y
+
+
+def make_backend_for(tmp_path, name):
+    root = str(tmp_path / name)
+    if name == "local":
+        return LocalFSBackend(root)
+    if name == "memory":
+        return MemoryTierBackend()  # pure RAM tier
+    if name == "memory_spill":
+        return MemoryTierBackend(LocalFSBackend(root))
+    if name == "sharded":
+        return ShardedBackend(root, num_shards=3)
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# backend round-trip parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["local", "memory", "memory_spill",
+                                  "sharded"])
+def test_backend_roundtrip_parity(tmp_path, name):
+    be = make_backend_for(tmp_path, name)
+    tree = sample_tree()
+    n = be.put("full_00000001", tree)
+    assert n > 0
+    be.flush()
+    assert be.exists("full_00000001")
+    assert "full_00000001" in be.keys()
+    assert_tree_identical(tree, be.get("full_00000001"))
+    be.delete("full_00000001")
+    assert not be.exists("full_00000001")
+    be.close()
+
+
+def test_sharded_splits_across_shard_dirs(tmp_path):
+    root = str(tmp_path / "sh")
+    be = ShardedBackend(root, num_shards=3, split_threshold_bytes=1024)
+    tree = sample_tree()
+    be.put("full_00000007", tree)
+    shard_files = [os.path.join(root, d, "full_00000007.npz")
+                   for d in sorted(os.listdir(root)) if d.startswith("shard_")]
+    present = [p for p in shard_files if os.path.exists(p)]
+    assert len(present) >= 2          # leaves genuinely spread over shards
+    # large leaves are split: the 48x260 f32 leaf exceeds the threshold
+    meta = json.load(open(os.path.join(root, "full_00000007.meta.json")))
+    kinds = {p["kind"] for p in meta["placements"]}
+    assert "split" in kinds and "whole" in kinds
+    assert_tree_identical(tree, be.get("full_00000007"))
+    be.close()
+
+
+def test_memory_tier_capacity_requires_lower():
+    """A byte-capacity without a spill target would silently drop
+    checkpoints the manifest still references — rejected up front."""
+    with pytest.raises(ValueError, match="lower backend"):
+        MemoryTierBackend(capacity_bytes=1024)
+
+
+def test_memory_tier_owns_its_bytes(tmp_path):
+    """put() snapshots: mutating the caller's leaves afterwards must not
+    alter the RAM copy, the spilled disk copy, or a previously-returned
+    get() tree (snapshot semantics on both ends)."""
+    root = str(tmp_path / "own")
+    be = MemoryTierBackend(LocalFSBackend(root))
+    a = np.arange(4, dtype=np.float32)
+    be.put("k", {"p": a})
+    be.flush()
+    a += 100.0                         # caller mutates after the put
+    got = be.get("k")
+    np.testing.assert_array_equal(got["p"], np.arange(4, dtype=np.float32))
+    got["p"] += 7.0                    # caller mutates a recovered tree
+    np.testing.assert_array_equal(be.get("k")["p"],
+                                  np.arange(4, dtype=np.float32))
+    np.testing.assert_array_equal(    # disk copy matches the RAM copy
+        LocalFSBackend(root).get("k")["p"], np.arange(4, dtype=np.float32))
+    be.close()
+
+
+def test_memory_tier_spill_evict_and_reload(tmp_path):
+    root = str(tmp_path / "mt")
+    cap = 64 * 1024
+    be = MemoryTierBackend(LocalFSBackend(root), capacity_bytes=cap)
+    trees = {f"full_{i:08d}": sample_tree(seed=i) for i in range(6)}
+    for k, t in trees.items():
+        be.put(k, t)
+    be.flush()
+    assert be.evictions > 0            # capacity forced spills out of RAM
+    st = be.stats()
+    assert st["resident_bytes"] <= cap
+    for k, t in trees.items():         # evicted blobs come back from lower
+        assert_tree_identical(t, be.get(k))
+    be.close()
+    # a fresh LocalFS store over the same root sees every spilled blob
+    reload_be = LocalFSBackend(root)
+    for k, t in trees.items():
+        assert_tree_identical(t, reload_be.get(k))
+
+
+# --------------------------------------------------------------------------
+# manifest journal
+# --------------------------------------------------------------------------
+
+def test_journal_appends_o1_bytes_per_write(tmp_path):
+    store = make_store(str(tmp_path / "j"), compact_every=10_000)
+    payload = {"g": np.zeros(64, np.float32)}
+    sizes = []
+    for step in range(10, 60):
+        store.save_diff(step, payload)
+        sizes.append(store.journal.log_bytes())
+    deltas = np.diff([0] + sizes)
+    # O(1) appended bytes per write: every delta is a single bounded
+    # journal line, independent of how many records precede it.
+    assert deltas.max() <= deltas.min() + 16
+    assert deltas.max() < 400
+    # and therefore total growth is linear, not quadratic
+    assert sizes[-1] <= deltas.max() * len(sizes)
+    store.close()
+
+
+def test_journal_compaction_and_reload(tmp_path):
+    root = str(tmp_path / "c")
+    store = make_store(root, compact_every=8)
+    for step in range(1, 21):
+        store.save_diff(step, {"g": np.zeros(8, np.float32)})
+    store.save_full(20, sample_tree())
+    assert store.journal.stats()["compactions"] >= 2
+    manifest_before = json.loads(json.dumps(store.manifest))
+    store.close()
+    snap = json.load(open(os.path.join(root, "manifest.json")))
+    assert "__seq__" in snap
+    reopened = CheckpointStore(root)
+    assert reopened.manifest == manifest_before
+    assert reopened.latest_full()["step"] == 20
+    reopened.close()
+
+
+def test_journal_torn_write_recovery(tmp_path):
+    root = str(tmp_path / "t")
+    store = make_store(root, compact_every=10_000)
+    tree = sample_tree()
+    store.save_full(4, tree)
+    for step in (5, 6, 7):
+        store.save_diff(step, {"g": np.zeros(8, np.float32)})
+    store.close()
+    # crash mid-append: the last journal line is torn
+    with open(os.path.join(root, "manifest.log"), "a") as f:
+        f.write('{"seq": 99, "op": "add", "kind": "diffs", "en')
+    reopened = CheckpointStore(root)
+    assert [e["step"] for e in reopened.manifest["diffs"]] == [5, 6, 7]
+    assert reopened.latest_full()["step"] == 4
+    assert_tree_identical(tree, reopened.load_full(reopened.latest_full()))
+    # the store keeps working after recovery (journal seq resumes safely)
+    reopened.save_diff(8, {"g": np.zeros(8, np.float32)})
+    assert [s for s, _ in reopened.diffs_after(7)] == [8]
+    reopened.close()
+    # second restart: the torn fragment must not have merged with the
+    # post-recovery append — every record survives another reload
+    again = CheckpointStore(root)
+    assert [e["step"] for e in again.manifest["diffs"]] == [5, 6, 7, 8]
+    assert again.latest_full()["step"] == 4
+    again.close()
+
+
+# --------------------------------------------------------------------------
+# garbage collection
+# --------------------------------------------------------------------------
+
+def test_gc_keeps_latest_chain_replayable(tmp_path):
+    store = make_store(str(tmp_path / "g"))
+    pay = lambda s: {"g": np.full(8, float(s), np.float32)}  # noqa: E731
+    # chain: full@3, batch[4..6] straddling full@5, diffs 7,8, full@8
+    store.save_full(3, sample_tree(1))
+    store.save_batch(4, 6, [pay(4), pay(5), pay(6)])
+    store.save_full(5, sample_tree(2))
+    store.save_diff(7, pay(7))
+    store.save_diff(8, pay(8))
+    store.save_full(8, sample_tree(3))
+    removed = store.gc(retention_fulls=2)
+    # cutoff is full@5: full@3 goes; the batch STRADDLES the cutoff
+    # (last=6 > 5) so it must survive; diffs 7,8 survive.
+    assert removed == {"fulls": 1, "diffs": 0, "batches": 0}
+    assert [e["step"] for e in store.manifest["fulls"]] == [5, 8]
+    replay = store.diffs_after(5)
+    assert [s for s, _ in replay] == [6, 7, 8]
+    for s, p in replay:
+        np.testing.assert_array_equal(p["g"], pay(s)["g"])
+    # retention=1: chain from full@8 needs nothing older
+    removed = store.gc(retention_fulls=1)
+    assert removed["fulls"] == 1 and removed["batches"] == 1
+    assert removed["diffs"] == 2
+    assert store.diffs_after(8) == []
+    assert store.latest_full()["step"] == 8
+    store.close()
+
+
+def test_auto_gc_on_save_full(tmp_path):
+    store = make_store(str(tmp_path / "ag"), retention_fulls=2)
+    for step in (4, 8, 12, 16):
+        for d in range(step - 3, step):
+            store.save_diff(d, {"g": np.zeros(4, np.float32)})
+        store.save_full(step, sample_tree())
+    assert [e["step"] for e in store.manifest["fulls"]] == [12, 16]
+    # every blob the manifest references still exists on the backend
+    for kind in ("fulls", "diffs", "batches"):
+        for e in store.manifest[kind]:
+            assert store.backend.exists(e["key"])
+    store.close()
+
+
+def test_gc_explicit_zero_disables_collection(tmp_path):
+    store = make_store(str(tmp_path / "g0"), retention_fulls=2)
+    store.retention_fulls = 0  # no auto-GC while seeding
+    for step in (2, 4, 6):
+        store.save_full(step, sample_tree())
+    assert store.gc(retention_fulls=0) == {}     # explicit 0 = never collect
+    assert len(store.manifest["fulls"]) == 3
+    store.close()
+
+
+def test_sharded_delete_survives_shard_count_change(tmp_path):
+    root = str(tmp_path / "sc")
+    be = ShardedBackend(root, num_shards=4, split_threshold_bytes=1024)
+    be.put("full_00000001", sample_tree())
+    be.close()
+    be2 = ShardedBackend(root, num_shards=2)
+    be2.delete("full_00000001")
+    leftovers = [os.path.join(d, f) for d in os.listdir(root)
+                 if d.startswith("shard_")
+                 for f in os.listdir(os.path.join(root, d))]
+    assert leftovers == []            # no orphaned pieces in shard_002/003
+    be2.close()
+
+
+def test_reopen_prunes_blobs_lost_before_writeback(tmp_path):
+    """Crash between the journal append and an async tier's write-back:
+    the reopened store must fall back to the previous durable full."""
+    root = str(tmp_path / "pw")
+    store = make_store(root)
+    tree = sample_tree(1)
+    store.save_full(4, tree)
+    store.save_full(8, sample_tree(2))
+    store.save_diff(9, {"g": np.zeros(4, np.float32)})
+    store.close()
+    # simulate the suffix of writes never landing on disk
+    os.unlink(os.path.join(root, "full_00000008.npz"))
+    os.unlink(os.path.join(root, "diff_00000009.npz"))
+    reopened = make_store(root)
+    assert reopened.latest_full()["step"] == 4
+    assert_tree_identical(tree, reopened.load_full(reopened.latest_full()))
+    assert reopened.diffs_after(4) == []
+    reopened.close()
+
+
+def test_gc_removes_legacy_path_only_entries(tmp_path):
+    """Seed-format manifests carry 'path' but no 'key'; GC must still be
+    able to delete those entries (journal matches by derived key)."""
+    root = str(tmp_path / "legacy")
+    be = LocalFSBackend(root)
+    for step in (2, 6):
+        be.put(f"full_{step:08d}", sample_tree(step))
+    legacy = {"fulls": [{"step": s, "path": os.path.join(
+        root, f"full_{s:08d}.npz"), "bytes": 1} for s in (2, 6)],
+        "diffs": [], "batches": []}
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump(legacy, f)
+    store = CheckpointStore(root)
+    assert [e["step"] for e in store.manifest["fulls"]] == [2, 6]
+    removed = store.gc(retention_fulls=1)
+    assert removed["fulls"] == 1
+    assert [e["step"] for e in store.manifest["fulls"]] == [6]
+    assert not store.backend.exists("full_00000002")
+    store.close()
+
+
+def test_pspec_splitter_follows_mesh(tmp_path):
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_local_mesh
+    splitter = make_pspec_splitter({(8, 64): ("embed", "mlp")})
+    with shd.use_mesh(make_local_mesh(1, 1)):
+        # 'mlp' maps to the physical 'model' axis -> split axis 1, even
+        # though axis 1 is the larger dim anyway; check against a shape
+        # where spec and largest-dim disagree:
+        splitter2 = make_pspec_splitter({(128, 16): (None, "mlp")})
+        assert splitter2(np.zeros((128, 16), np.float32)) == 1
+        assert splitter(np.zeros((8, 64), np.float32)) == 1
+    # without a mesh: falls back to the largest dimension
+    assert splitter2(np.zeros((128, 16), np.float32)) == 0
+
+
+# --------------------------------------------------------------------------
+# diffs_after efficiency (satellite: skip non-overlapping batches)
+# --------------------------------------------------------------------------
+
+class CountingBackend(LocalFSBackend):
+    def __init__(self, root):
+        super().__init__(root)
+        self.gets = 0
+
+    def get(self, key):
+        self.gets += 1
+        return super().get(key)
+
+
+def test_diffs_after_skips_nonoverlapping_batches(tmp_path):
+    be = CountingBackend(str(tmp_path / "cb"))
+    store = CheckpointStore(backend=be)
+    pay = {"g": np.zeros(4, np.float32)}
+    store.save_batch(1, 4, [pay] * 4)
+    store.save_batch(5, 8, [pay] * 4)
+    store.save_batch(9, 12, [pay] * 4)
+    be.gets = 0
+    out = store.diffs_after(8)
+    assert [s for s, _ in out] == [9, 10, 11, 12]
+    assert be.gets == 1                # only the overlapping batch loaded
+    store.close()
+
+
+# --------------------------------------------------------------------------
+# LowDiff end-to-end across backends: bit-identical recovery
+# --------------------------------------------------------------------------
+
+def run_lowdiff(store):
+    model = build_model(get_config("qwen2-1.5b").reduced())
+    ld = LowDiff(model, store, rho=0.05, lr=1e-3, full_interval=4,
+                 batch_size=2, parallel_recovery=False)
+    state = init_state(model, jax.random.PRNGKey(0), mode="lowdiff")
+    for t in range(9):
+        state, _ = ld.train_step(state, make_batch(model.cfg, SEQ, BATCH,
+                                                   step=t))
+    ld.flush()
+    rec, n = ld.recover()
+    ld.close()
+    return state, rec, n
+
+
+@pytest.mark.parametrize("name", ["memory_spill", "sharded"])
+def test_lowdiff_backend_recovery_bit_identical_to_local(tmp_path, name):
+    """The same deterministic run persisted through another backend must
+    recover the exact bytes LocalFS recovers (acceptance criterion)."""
+    local_store = CheckpointStore(
+        backend=LocalFSBackend(str(tmp_path / "ld_local")))
+    live_a, rec_a, n_a = run_lowdiff(local_store)
+    other_store = CheckpointStore(
+        backend=make_backend_for(tmp_path / "ld", name))
+    live_b, rec_b, n_b = run_lowdiff(other_store)
+    assert n_a == n_b
+    assert int(rec_a["step"]) == int(rec_b["step"]) == 9
+    assert_tree_identical(live_a["params"], live_b["params"])
+    assert_tree_identical(rec_a["params"], rec_b["params"])
+    assert_tree_identical(rec_a["opt"].mu, rec_b["opt"].mu)
+    assert_tree_identical(rec_a["opt"].nu, rec_b["opt"].nu)
