@@ -1,0 +1,72 @@
+"""Exp. 11: remote object-store tier throughput.
+
+Measures RemoteObjectBackend put/get bandwidth through a hermetic
+FakeObjectStore (with simulated per-MB latency standing in for the
+network) at several chunk sizes, the retry overhead under injected
+transient faults, and how the CPU-memory tier's asynchronous write-back
+hides remote put latency from the caller (the paper's requirement that
+the lowest tier absorb a gradient stream without stalling training).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint.backends import MemoryTierBackend
+from repro.checkpoint.remote import (FakeObjectStore, FaultInjector,
+                                     RemoteObjectBackend)
+
+BLOB_MB = 8
+LATENCY_S_PER_MB = 0.002       # simulated wire time: ~500 MB/s
+
+
+def _tree(mb: float, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = int(mb * 2**20 / 4)
+    return {"g": rng.normal(size=(n,)).astype(np.float32)}
+
+
+def main(out):
+    tree = _tree(BLOB_MB)
+
+    for chunk_mb in (1, 4, 16):
+        be = RemoteObjectBackend(
+            FakeObjectStore(latency_s_per_mb=LATENCY_S_PER_MB),
+            chunk_bytes=int(chunk_mb * 2**20))
+        t_put = timeit(lambda: be.put("k", tree), warmup=1, iters=3)
+        t_get = timeit(lambda: be.get("k"), warmup=1, iters=3)
+        out(row(f"exp11.remote.chunk{chunk_mb}mb.put", t_put,
+                f"{BLOB_MB / t_put:.0f}MB/s"))
+        out(row(f"exp11.remote.chunk{chunk_mb}mb.get", t_get,
+                f"{BLOB_MB / t_get:.0f}MB/s"))
+
+    # retry overhead under a 20% transient-fault rate
+    faulty = RemoteObjectBackend(
+        FakeObjectStore(FaultInjector(rate=0.2, seed=7),
+                        latency_s_per_mb=LATENCY_S_PER_MB),
+        chunk_bytes=1 << 20, backoff_s=0.001)
+    t_put = timeit(lambda: faulty.put("k", tree), warmup=1, iters=3)
+    st = faulty.stats()
+    out(row("exp11.remote.faulty20.put", t_put,
+            f"{BLOB_MB / t_put:.0f}MB/s retries={st['retries']}"))
+
+    # async write-back: the caller sees memcpy speed, not wire speed
+    tier = MemoryTierBackend(RemoteObjectBackend(
+        FakeObjectStore(latency_s_per_mb=LATENCY_S_PER_MB),
+        chunk_bytes=4 << 20))
+    i = [0]
+
+    def tiered_put():
+        tier.put(f"k{i[0]}", tree)
+        i[0] += 1
+
+    t_tier = timeit(tiered_put, warmup=1, iters=3)
+    tier.flush()
+    out(row("exp11.remote.memtier.put", t_tier,
+            f"caller sees {BLOB_MB / t_tier:.0f}MB/s "
+            f"(wire {1.0 / LATENCY_S_PER_MB:.0f}MB/s)"))
+    tier.close()
+
+
+if __name__ == "__main__":
+    main(print)

@@ -28,6 +28,7 @@ MODULES = [
     ("exp7_storage", "benchmarks.storage"),
     ("exp8_compression_ratio", "benchmarks.compression_ratio"),
     ("exp9_10_scaling", "benchmarks.scaling"),
+    ("exp11_remote_tier", "benchmarks.remote_tier"),
 ]
 
 

@@ -5,6 +5,8 @@ and benchmarks to select a backend by name::
 
     store = make_store("/tmp/ck", backend="sharded", shards=8,
                        retention_fulls=2)
+    store = make_store("/tmp/ck", backend="remote",
+                       remote_url="fake://bucket", chunk_mb=2.0)
 """
 from __future__ import annotations
 
@@ -14,18 +16,32 @@ from repro.checkpoint.backends import (BACKENDS, LocalFSBackend,
                                        MemoryTierBackend, ShardedBackend,
                                        StorageBackend, make_backend,
                                        make_pspec_splitter)
+from repro.checkpoint.remote import (ChecksumError, FakeObjectStore,
+                                     FaultInjector, FilesystemObjectStore,
+                                     ObjectStore, RemoteObjectBackend,
+                                     RetryExhaustedError,
+                                     TransientStoreError,
+                                     make_remote_backend)
 from repro.checkpoint.store import CheckpointStore
 
-__all__ = ["BACKENDS", "CheckpointStore", "LocalFSBackend",
-           "MemoryTierBackend", "ShardedBackend", "StorageBackend",
-           "make_backend", "make_pspec_splitter", "make_store"]
+__all__ = ["BACKENDS", "CheckpointStore", "ChecksumError",
+           "FakeObjectStore", "FaultInjector", "FilesystemObjectStore",
+           "LocalFSBackend", "MemoryTierBackend", "ObjectStore",
+           "RemoteObjectBackend", "RetryExhaustedError", "ShardedBackend",
+           "StorageBackend", "TransientStoreError", "make_backend",
+           "make_pspec_splitter", "make_remote_backend", "make_store"]
 
 
 def make_store(root: Optional[str], *, backend: str = "local",
                shards: int = 4, capacity_mb: Optional[float] = None,
-               retention_fulls: int = 0,
-               compact_every: int = 256) -> CheckpointStore:
+               retention_fulls: int = 0, compact_every: int = 256,
+               remote_url: Optional[str] = None, chunk_mb: float = 4.0,
+               max_retries: int = 4,
+               remote_fault_rate: float = 0.0) -> CheckpointStore:
     """Build a CheckpointStore over the named backend."""
-    be = make_backend(backend, root, shards=shards, capacity_mb=capacity_mb)
+    be = make_backend(backend, root, shards=shards, capacity_mb=capacity_mb,
+                      remote_url=remote_url, chunk_mb=chunk_mb,
+                      max_retries=max_retries,
+                      remote_fault_rate=remote_fault_rate)
     return CheckpointStore(root, backend=be, retention_fulls=retention_fulls,
                            compact_every=compact_every)

@@ -25,7 +25,6 @@ from __future__ import annotations
 import abc
 import json
 import os
-import tempfile
 import threading
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -151,6 +150,11 @@ class MemoryTierBackend(StorageBackend):
             ThreadPoolExecutor(max_workers=1, thread_name_prefix="spill")
             if lower is not None else None)
         self._inflight: Dict[str, Future] = {}
+        # write-backs that completed with an exception: the failure must
+        # surface from flush(), never be silently pruned — the journal
+        # already references the blob, and losing it mid-chain would
+        # hand recovery a hole
+        self._wb_errors: List[Tuple[str, BaseException]] = []
         self.evictions = 0
         self.spills = 0
 
@@ -180,9 +184,13 @@ class MemoryTierBackend(StorageBackend):
 
     def _prune_done(self):
         """Drop completed write-back futures so _inflight stays O(pending)
-        over a long per-iteration-checkpointing run."""
+        over a long per-iteration-checkpointing run; failed ones are
+        recorded and re-raised from flush()."""
         for k, fut in list(self._inflight.items()):
             if fut.done():
+                err = fut.exception()
+                if err is not None:
+                    self._wb_errors.append((k, err))
                 self._inflight.pop(k, None)
 
     def _evict(self):
@@ -248,16 +256,27 @@ class MemoryTierBackend(StorageBackend):
         for key in list(self._inflight):
             fut = self._inflight.pop(key, None)
             if fut is not None:
-                fut.result()
+                try:
+                    fut.result()
+                except BaseException as e:
+                    self._wb_errors.append((key, e))
+        if self._wb_errors:
+            key, err = self._wb_errors[0]
+            raise RuntimeError(
+                f"async write-back of {key!r} failed "
+                f"({len(self._wb_errors) - 1} more); the RAM tier still "
+                f"holds the blob but the lower tier does not") from err
         if self.lower is not None:
             self.lower.flush()
 
     def close(self) -> None:
-        self.flush()
-        if self._writeback is not None:
-            self._writeback.shutdown(wait=True)
-        if self.lower is not None:
-            self.lower.close()
+        try:
+            self.flush()
+        finally:
+            if self._writeback is not None:
+                self._writeback.shutdown(wait=True)
+            if self.lower is not None:
+                self.lower.close()
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
@@ -266,6 +285,7 @@ class MemoryTierBackend(StorageBackend):
         return {"backend": self.name, "resident_blobs": resident,
                 "resident_bytes": nbytes, "evictions": self.evictions,
                 "spills": self.spills,
+                "writeback_errors": len(self._wb_errors),
                 "lower": self.lower.stats() if self.lower else None}
 
 
@@ -392,18 +412,10 @@ class ShardedBackend(StorageBackend):
         nbytes = sum(f.result() for f in futs.values())
         meta = {"struct": struct, "placements": placements, "shards": used,
                 "num_shards": self.num_shards, "nbytes": nbytes}
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w", encoding="utf-8") as f:
-                json.dump(meta, f)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, self._meta_path(key))
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
-        return nbytes + os.path.getsize(self._meta_path(key))
+        meta_bytes = cio.atomic_write(
+            self._meta_path(key),
+            lambda f: f.write(json.dumps(meta).encode("utf-8")))
+        return nbytes + meta_bytes
 
     def get(self, key: str) -> Any:
         try:
@@ -463,15 +475,21 @@ class ShardedBackend(StorageBackend):
 # Factory
 # ----------------------------------------------------------------------
 
-BACKENDS = ("local", "memory", "sharded")
+BACKENDS = ("local", "memory", "sharded", "remote")
 
 
 def make_backend(name: str, root: Optional[str], *, shards: int = 4,
                  capacity_mb: Optional[float] = None,
-                 memory_spill: bool = True) -> StorageBackend:
+                 memory_spill: bool = True,
+                 remote_url: Optional[str] = None,
+                 chunk_mb: float = 4.0, max_retries: int = 4,
+                 remote_fault_rate: float = 0.0) -> StorageBackend:
     """Build a backend by name. ``memory`` layers the RAM tier over a
     LocalFS lower tier at ``root`` (pure-RAM when root is None or
-    memory_spill is False)."""
+    memory_spill is False). ``remote`` layers the RAM tier over a
+    :class:`~repro.checkpoint.remote.RemoteObjectBackend` — the async
+    write-back absorbs object-store latency, so the training loop never
+    blocks on the remote tier."""
     if name == "local":
         if root is None:
             raise ValueError("local backend requires a root directory")
@@ -485,4 +503,20 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
         if root is None:
             raise ValueError("sharded backend requires a root directory")
         return ShardedBackend(root, num_shards=shards)
+    if name == "remote":
+        # function-level import: remote.py subclasses StorageBackend, so
+        # importing it at module scope here would be circular
+        from repro.checkpoint.remote import make_remote_backend
+        url = remote_url
+        if url is None:
+            if root is None:
+                raise ValueError(
+                    "remote backend requires --remote-url or a root "
+                    "directory (which becomes file://<root>)")
+            url = f"file://{root}"
+        lower = make_remote_backend(
+            url, chunk_bytes=int(chunk_mb * 2**20), max_retries=max_retries,
+            journal_root=root, fault_rate=remote_fault_rate)
+        cap = int(capacity_mb * 2**20) if capacity_mb else None
+        return MemoryTierBackend(lower, capacity_bytes=cap)
     raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")

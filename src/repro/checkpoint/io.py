@@ -128,14 +128,18 @@ def unpack(struct: dict, arrays) -> Any:
     return _unpack(struct, arrays)
 
 
-def save_npz(path: str, payload: Dict[str, np.ndarray]) -> int:
-    """Atomic + fsync'd raw npz write. Returns bytes written."""
+def atomic_write(path: str, write_fn) -> int:
+    """Crash-safe file write: mkstemp in the target directory,
+    ``write_fn(binary_file)``, flush+fsync, then ``os.replace`` — a
+    reader never observes a torn file. The single implementation of the
+    pattern; every backend's durable write goes through it. Returns
+    bytes written."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, **payload)
+            write_fn(f)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
@@ -146,19 +150,46 @@ def save_npz(path: str, payload: Dict[str, np.ndarray]) -> int:
     return os.path.getsize(path)
 
 
+def save_npz(path: str, payload: Dict[str, np.ndarray]) -> int:
+    """Atomic + fsync'd raw npz write. Returns bytes written."""
+    return atomic_write(path, lambda f: np.savez(f, **payload))
+
+
 def load_npz(path: str) -> Dict[str, np.ndarray]:
     """Fully materialize an npz written by :func:`save_npz`."""
     with np.load(path) as z:
         return {k: z[k] for k in z.files}
 
 
-def save(path: str, obj: Any) -> int:
-    """Atomic write. Returns bytes written."""
+def payload_of(obj: Any) -> Dict[str, np.ndarray]:
+    """Encode obj as the canonical npz payload dict (``a0..aN`` +
+    embedded ``__struct__``). Single source of truth for the on-wire /
+    on-disk encoding — every backend writes exactly this."""
     struct, arrays = pack(obj)
     payload = {f"a{i}": a for i, a in enumerate(arrays)}
     payload["__struct__"] = np.frombuffer(
         json.dumps(struct).encode(), dtype=np.uint8)
-    return save_npz(path, payload)
+    return payload
+
+
+def dumps(obj: Any) -> bytes:
+    """Serialize obj to npz bytes (the same encoding :func:`save` puts
+    on disk) — for backends that ship byte blobs instead of files."""
+    buf = _io.BytesIO()
+    np.savez(buf, **payload_of(obj))
+    return buf.getvalue()
+
+
+def loads(data: bytes) -> Any:
+    """Inverse of :func:`dumps`."""
+    with np.load(_io.BytesIO(data)) as z:
+        struct = json.loads(bytes(z["__struct__"]).decode())
+        return _unpack(struct, z)
+
+
+def save(path: str, obj: Any) -> int:
+    """Atomic write. Returns bytes written."""
+    return save_npz(path, payload_of(obj))
 
 
 def load(path: str) -> Any:

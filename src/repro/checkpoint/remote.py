@@ -1,0 +1,531 @@
+"""Remote object-store checkpoint tier (S3/GCS-style).
+
+Production checkpointing ultimately lands on remote object storage
+(Check-N-Run, TierCheck): high-latency, quota-bounded, and failure-prone
+enough that every transfer needs integrity checks and retries. This
+module provides
+
+* :class:`ObjectStore` — the minimal byte-level client abstraction
+  (put/get/delete/list). Two hermetic implementations ship with it:
+  :class:`FakeObjectStore` (in-process dict, optional fault injection
+  and simulated latency — tests and benchmarks) and
+  :class:`FilesystemObjectStore` (a directory standing in for a mounted
+  bucket — crash/recovery tests). A real S3/GCS client only has to
+  implement the four byte-level methods; no SDK is baked into the image.
+* :class:`RemoteObjectBackend` — a :class:`~repro.checkpoint.backends.
+  StorageBackend` over any ObjectStore: blobs are content-chunked
+  (``chunk_bytes``), every chunk carries a sha256 checksum, and an index
+  object written *last* is the commit point (a crash mid-upload leaves
+  no index, so ``exists`` is false and the store's ``_prune_missing``
+  drops the manifest entry). Reads verify each chunk's checksum and
+  re-fetch corrupted chunks; every transfer is wrapped in bounded
+  retries with exponential backoff.
+
+The backend is intended to sit as the *lowest* tier under
+:class:`~repro.checkpoint.backends.MemoryTierBackend`: the RAM tier's
+asynchronous write-back absorbs remote put latency, so per-iteration
+differential checkpointing never stalls the training loop on the
+object store.
+"""
+from __future__ import annotations
+
+import abc
+import hashlib
+import json
+import os
+import random
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.checkpoint import io as cio
+from repro.checkpoint.backends import StorageBackend
+
+
+class TransientStoreError(Exception):
+    """A retryable object-store failure (timeout, dropped connection,
+    throttling). :class:`RemoteObjectBackend` retries these."""
+
+
+class ChecksumError(TransientStoreError):
+    """A fetched chunk failed checksum verification; retryable — the
+    next fetch may return clean bytes."""
+
+
+class RetryExhaustedError(RuntimeError):
+    """Bounded retries were exhausted without a successful transfer."""
+
+
+# ----------------------------------------------------------------------
+# fault injection
+# ----------------------------------------------------------------------
+
+class FaultInjector:
+    """Configurable transient-fault schedule for hermetic stores.
+
+    Deterministic counts are consumed first, in call order:
+
+    * ``drop_puts`` — first N ``put_object`` calls raise
+      :class:`TransientStoreError` (the chunk never lands).
+    * ``drop_gets`` — first N ``get_object`` calls raise
+      :class:`TransientStoreError`.
+    * ``flip_gets`` — first N ``get_object`` calls return the stored
+      bytes with one byte corrupted (a checksum flip in flight).
+
+    After the counts are spent, ``rate`` injects random transient drops
+    on both puts and gets with a seeded RNG — statistical soak mode for
+    benchmarks. Thread-safe (the write-back thread and the reader race).
+    """
+
+    def __init__(self, *, drop_puts: int = 0, drop_gets: int = 0,
+                 flip_gets: int = 0, rate: float = 0.0, seed: int = 0):
+        self.drop_puts = drop_puts
+        self.drop_gets = drop_gets
+        self.flip_gets = flip_gets
+        self.rate = rate
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.injected = 0
+
+    def _roll(self) -> bool:
+        return self.rate > 0.0 and self._rng.random() < self.rate
+
+    def on_put(self, name: str) -> None:
+        with self._lock:
+            if self.drop_puts > 0:
+                self.drop_puts -= 1
+                self.injected += 1
+                raise TransientStoreError(f"injected put drop: {name}")
+            if self._roll():
+                self.injected += 1
+                raise TransientStoreError(f"injected put drop: {name}")
+
+    def on_get(self, name: str, data: bytes) -> bytes:
+        with self._lock:
+            if self.drop_gets > 0:
+                self.drop_gets -= 1
+                self.injected += 1
+                raise TransientStoreError(f"injected get drop: {name}")
+            if self.flip_gets > 0 and data:
+                self.flip_gets -= 1
+                self.injected += 1
+                return bytes([data[0] ^ 0xFF]) + data[1:]
+            if self._roll():
+                self.injected += 1
+                raise TransientStoreError(f"injected get drop: {name}")
+        return data
+
+
+# ----------------------------------------------------------------------
+# object-store clients
+# ----------------------------------------------------------------------
+
+class ObjectStore(abc.ABC):
+    """Minimal byte-level object-store client. Names are '/'-separated
+    path-safe strings; values are opaque byte blobs."""
+
+    scheme = "abstract"
+
+    @abc.abstractmethod
+    def put_object(self, name: str, data: bytes) -> None: ...
+
+    @abc.abstractmethod
+    def get_object(self, name: str) -> bytes:
+        """Raises FileNotFoundError when the object is absent."""
+
+    @abc.abstractmethod
+    def delete_object(self, name: str) -> None:
+        """Idempotent."""
+
+    @abc.abstractmethod
+    def list_objects(self, prefix: str = "") -> List[str]: ...
+
+    def has_object(self, name: str) -> bool:
+        """Metadata-only presence check (HEAD-style). The default
+        downloads the body; real clients should override."""
+        try:
+            self.get_object(name)
+            return True
+        except FileNotFoundError:
+            return False
+
+
+class FakeObjectStore(ObjectStore):
+    """In-process object store: a dict behind a lock, with optional
+    fault injection and simulated per-byte latency. Hermetic stand-in
+    for S3/GCS in tests and benchmarks."""
+
+    scheme = "fake"
+
+    def __init__(self, faults: Optional[FaultInjector] = None, *,
+                 latency_s_per_mb: float = 0.0):
+        self._objects: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.faults = faults
+        self.latency_s_per_mb = latency_s_per_mb
+        self.put_calls = 0
+        self.get_calls = 0
+
+    def _simulate_latency(self, nbytes: int):
+        if self.latency_s_per_mb > 0.0:
+            time.sleep(self.latency_s_per_mb * nbytes / 2**20)
+
+    def put_object(self, name: str, data: bytes) -> None:
+        with self._lock:
+            self.put_calls += 1
+        if self.faults is not None:
+            self.faults.on_put(name)
+        self._simulate_latency(len(data))
+        with self._lock:
+            self._objects[name] = bytes(data)
+
+    def get_object(self, name: str) -> bytes:
+        with self._lock:
+            self.get_calls += 1
+            data = self._objects.get(name)
+        if data is None:
+            raise FileNotFoundError(f"fake://{name}")
+        if self.faults is not None:
+            data = self.faults.on_get(name, data)
+        self._simulate_latency(len(data))
+        return data
+
+    def delete_object(self, name: str) -> None:
+        with self._lock:
+            self._objects.pop(name, None)
+
+    def list_objects(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(n for n in self._objects if n.startswith(prefix))
+
+    def has_object(self, name: str) -> bool:
+        with self._lock:
+            return name in self._objects
+
+
+class FilesystemObjectStore(ObjectStore):
+    """A local directory standing in for a mounted bucket. Objects are
+    files under ``root`` (atomic tmp+rename writes); '/' in names maps
+    to subdirectories. Survives process restarts, so crash/recovery
+    tests can model 'the bucket outlives the trainer'."""
+
+    scheme = "file"
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, name)
+
+    def put_object(self, name: str, data: bytes) -> None:
+        cio.atomic_write(self._path(name), lambda f: f.write(data))
+
+    def get_object(self, name: str) -> bytes:
+        try:
+            with open(self._path(name), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise FileNotFoundError(f"file://{self._path(name)}")
+
+    def delete_object(self, name: str) -> None:
+        try:
+            os.unlink(self._path(name))
+        except FileNotFoundError:
+            pass
+
+    def has_object(self, name: str) -> bool:
+        return os.path.exists(self._path(name))
+
+    def list_objects(self, prefix: str = "") -> List[str]:
+        # a '/'-terminated directory component in the prefix scopes the
+        # walk to that subtree — a per-key listing must not pay a
+        # full-bucket scan
+        base = self.root
+        head = prefix.rsplit("/", 1)[0] if "/" in prefix else ""
+        if head:
+            base = os.path.join(self.root, *head.split("/"))
+            if not os.path.isdir(base):
+                return []
+        out = []
+        for dirpath, _, files in os.walk(base):
+            rel = os.path.relpath(dirpath, self.root)
+            for f in files:
+                if f.endswith(".tmp"):
+                    continue
+                name = f if rel == "." else f"{rel}/{f}".replace(os.sep, "/")
+                if name.startswith(prefix):
+                    out.append(name)
+        return sorted(out)
+
+
+# ----------------------------------------------------------------------
+# the storage backend
+# ----------------------------------------------------------------------
+
+def _sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+class RemoteObjectBackend(StorageBackend):
+    """StorageBackend over an :class:`ObjectStore` with chunking,
+    per-chunk sha256 checksums, and bounded-retry transfers.
+
+    Object layout per key::
+
+        <key>/000000.chunk ... <key>/NNNNNN.chunk
+        <key>/index.json      # chunk list + checksums (commit point)
+
+    ``put`` serializes the pytree (same npz encoding as the local
+    backend), splits the bytes into ``chunk_bytes`` pieces, uploads each
+    with retries, then uploads the index — the commit point. ``get``
+    fetches the index, then each chunk with checksum verification;
+    a corrupted chunk is re-fetched (checksum mismatch is treated as a
+    transient fault). Exhausted retries raise
+    :class:`RetryExhaustedError`.
+
+    ``journal_root`` is where the chain store's manifest journal lives
+    (a *local* directory — the journal needs appendable files, which an
+    object store does not give you). None means the manifest is held in
+    memory only, which is fine for a FakeObjectStore whose contents die
+    with the process anyway.
+    """
+
+    name = "remote"
+    INDEX = "index.json"
+
+    def __init__(self, store: ObjectStore, *, chunk_bytes: int = 4 << 20,
+                 max_retries: int = 4, backoff_s: float = 0.01,
+                 backoff_max_s: float = 2.0,
+                 journal_root: Optional[str] = None):
+        if chunk_bytes < 1:
+            raise ValueError("chunk_bytes must be >= 1")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        self.store = store
+        self.chunk_bytes = chunk_bytes
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_max_s = backoff_max_s
+        self.persist_root = journal_root
+        if journal_root is not None:
+            os.makedirs(journal_root, exist_ok=True)
+        self._lock = threading.Lock()
+        #: key -> generation of the last index this backend committed;
+        #: lets put() skip the stale-chunk sweep on first writes (the
+        #: overwhelmingly common case under step-named keys)
+        self._live_gens: Dict[str, str] = {}
+        self.puts = 0
+        self.gets = 0
+        self.retries = 0
+        self.checksum_failures = 0
+        self.bytes_up = 0
+        self.bytes_down = 0
+
+    # ------------------------------------------------------------------
+    def _count(self, attr: str, n: int = 1):
+        with self._lock:
+            setattr(self, attr, getattr(self, attr) + n)
+
+    def _with_retries(self, fn, desc: str):
+        delay = self.backoff_s
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn()
+            except TransientStoreError as e:
+                last = e
+                if attempt == self.max_retries:
+                    break              # budget spent: no sleep, no retry
+                self._count("retries")
+                time.sleep(min(delay, self.backoff_max_s))
+                delay *= 2.0
+        raise RetryExhaustedError(
+            f"{desc}: no success in {self.max_retries + 1} attempts "
+            f"(last: {last})") from last
+
+    def _chunk_name(self, key: str, gen: str, i: int) -> str:
+        return f"{key}/{gen}.{i:06d}.chunk"
+
+    def _index_name(self, key: str) -> str:
+        return f"{key}/{self.INDEX}"
+
+    # ------------------------------------------------------------------
+    def put(self, key: str, obj: Any) -> int:
+        blob = cio.dumps(obj)
+        chunks = [blob[o:o + self.chunk_bytes]
+                  for o in range(0, len(blob), self.chunk_bytes)] or [b""]
+        # chunks carry a per-put generation prefix so a re-put never
+        # overwrites the chunks the live index points at: until the new
+        # index commits, the old version stays fully readable
+        gen = os.urandom(4).hex()
+        index = {"nbytes": len(blob), "gen": gen, "chunks": []}
+        for i, chunk in enumerate(chunks):
+            name = self._chunk_name(key, gen, i)
+            self._with_retries(
+                lambda n=name, c=chunk: self.store.put_object(n, c),
+                f"put {name}")
+            index["chunks"].append({"name": name, "sha256": _sha256(chunk),
+                                    "size": len(chunk)})
+        # the index is the commit point: a crash before this line leaves
+        # no index (or the previous one), exists()/get() keep answering
+        # for the last committed version, and the chain store's
+        # _prune_missing drops a never-committed manifest entry on reopen
+        index_bytes = json.dumps(index).encode()
+        self._with_retries(
+            lambda: self.store.put_object(self._index_name(key), index_bytes),
+            f"put {self._index_name(key)}")
+        self._count("puts")
+        self._count("bytes_up", len(blob) + len(index_bytes))
+        with self._lock:
+            prev = self._live_gens.get(key)
+            self._live_gens[key] = gen
+        if prev is not None and prev != gen:
+            # only a re-put leaves a superseded generation; first writes
+            # (every step-named key, i.e. nearly all of them) skip the
+            # listing entirely
+            self._sweep_stale(key, gen)
+        return len(blob)
+
+    def _sweep_stale(self, key: str, live_gen: str) -> None:
+        """Best-effort GC of chunks from superseded generations (and
+        from crashed uploads that never committed). Failures are
+        harmless: orphans cost bucket bytes, never correctness."""
+        keep = f"{key}/{live_gen}."
+        for name in self.store.list_objects(f"{key}/"):
+            if name == self._index_name(key) or name.startswith(keep):
+                continue
+            try:
+                self.store.delete_object(name)
+            except TransientStoreError:
+                pass
+
+    def _load_index(self, key: str) -> dict:
+        def fetch():
+            data = self.store.get_object(self._index_name(key))
+            try:
+                return json.loads(data.decode("utf-8"))
+            except (json.JSONDecodeError, UnicodeDecodeError) as e:
+                # a corrupted index is as retryable as a corrupted chunk
+                self._count("checksum_failures")
+                raise ChecksumError(
+                    f"index for {key!r} failed to parse") from e
+        return self._with_retries(fetch, f"get {self._index_name(key)}")
+
+    def _fetch_chunk(self, entry: dict) -> bytes:
+        def fetch():
+            data = self.store.get_object(entry["name"])
+            if _sha256(data) != entry["sha256"]:
+                self._count("checksum_failures")
+                raise ChecksumError(
+                    f"chunk {entry['name']} checksum mismatch")
+            return data
+        return self._with_retries(fetch, f"get {entry['name']}")
+
+    def get(self, key: str) -> Any:
+        index = self._load_index(key)
+        blob = b"".join(self._fetch_chunk(e) for e in index["chunks"])
+        self._count("gets")
+        self._count("bytes_down", len(blob))
+        return cio.loads(blob)
+
+    def delete(self, key: str) -> None:
+        # index first: a crash mid-delete leaves orphan chunks (harmless,
+        # swept by the next delete) rather than an index pointing at
+        # missing chunks
+        self.store.delete_object(self._index_name(key))
+        for name in self.store.list_objects(f"{key}/"):
+            self.store.delete_object(name)
+        with self._lock:
+            self._live_gens.pop(key, None)
+
+    def exists(self, key: str) -> bool:
+        # metadata-only, but still fault-prone on a real wire: retry
+        # transients rather than mis-reporting a reachable blob as
+        # missing (which would make _prune_missing drop live chain
+        # entries on reopen)
+        return self._with_retries(
+            lambda: self.store.has_object(self._index_name(key)),
+            f"head {self._index_name(key)}")
+
+    def keys(self) -> List[str]:
+        suffix = f"/{self.INDEX}"
+        return sorted(n[:-len(suffix)] for n in self.store.list_objects()
+                      if n.endswith(suffix))
+
+    def url(self, key: str) -> str:
+        return f"{self.store.scheme}://{key}"
+
+    def flush(self) -> None:
+        """Puts are synchronous at this tier; nothing buffered."""
+
+    def close(self) -> None:
+        self.flush()
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"backend": self.name, "scheme": self.store.scheme,
+                    "chunk_bytes": self.chunk_bytes,
+                    "puts": self.puts, "gets": self.gets,
+                    "retries": self.retries,
+                    "checksum_failures": self.checksum_failures,
+                    "bytes_up": self.bytes_up,
+                    "bytes_down": self.bytes_down}
+
+
+# ----------------------------------------------------------------------
+# URL factory
+# ----------------------------------------------------------------------
+
+#: shared fake buckets: two make_remote_backend("fake://name") calls in
+#: one process see the same objects, so in-process recovery works.
+_FAKE_BUCKETS: Dict[str, FakeObjectStore] = {}
+_FAKE_LOCK = threading.Lock()
+
+
+def make_remote_backend(url: str, *, chunk_bytes: int = 4 << 20,
+                        max_retries: int = 4,
+                        journal_root: Optional[str] = None,
+                        fault_rate: float = 0.0,
+                        seed: int = 0) -> RemoteObjectBackend:
+    """Build a RemoteObjectBackend from a URL.
+
+    * ``fake://<bucket>`` — in-process store, shared per bucket name
+      within the process. The fault configuration is applied on every
+      call (last caller wins): ``fault_rate`` > 0 attaches a fresh
+      statistical injector, 0 detaches any previous one — a cached
+      bucket never silently keeps a stale fault schedule.
+    * ``file:///path`` — directory-backed store; objects land under
+      ``<path>/objects`` and the manifest journal under ``<path>``
+      unless ``journal_root`` overrides it.
+
+    Real S3/GCS schemes are not bundled (no SDK in the image): pass a
+    custom :class:`ObjectStore` to :class:`RemoteObjectBackend` instead.
+    """
+    scheme, sep, rest = url.partition("://")
+    if not sep:
+        raise ValueError(f"remote url {url!r} needs a scheme://")
+    if scheme == "fake":
+        bucket = rest or "default"
+        with _FAKE_LOCK:
+            store = _FAKE_BUCKETS.get(bucket)
+            if store is None:
+                store = FakeObjectStore()
+                _FAKE_BUCKETS[bucket] = store
+            # reconfigure faults on every call, cached bucket or not
+            store.faults = (FaultInjector(rate=fault_rate, seed=seed)
+                            if fault_rate > 0.0 else None)
+        return RemoteObjectBackend(store, chunk_bytes=chunk_bytes,
+                                   max_retries=max_retries,
+                                   journal_root=journal_root)
+    if scheme == "file":
+        root = rest
+        if not root:
+            raise ValueError("file:// remote url needs a path")
+        store = FilesystemObjectStore(os.path.join(root, "objects"))
+        return RemoteObjectBackend(
+            store, chunk_bytes=chunk_bytes, max_retries=max_retries,
+            journal_root=journal_root if journal_root is not None else root)
+    raise ValueError(
+        f"unsupported remote scheme {scheme!r}: this build bundles "
+        f"fake:// and file:// (implement ObjectStore for real buckets)")

@@ -118,24 +118,35 @@ class CheckpointStore:
 
     def diffs_after(self, step: int) -> List[Tuple[int, Any]]:
         """Ordered (step, payload) list of differentials with step > given.
-        Non-overlapping batches are skipped without touching storage."""
+
+        Each step appears exactly once: a differential present both as a
+        standalone ``diff_*`` blob and inside a ``batch_*`` blob (e.g. a
+        retried write that landed twice) is returned from the standalone
+        blob only — replaying it twice through Adam would advance the
+        moment estimates twice and corrupt the recovered state.
+        Non-overlapping batches, and batches every step of which is
+        already covered, are skipped without touching storage."""
         with self._lock:
             diffs = list(self.manifest["diffs"])
             batches = list(self.manifest["batches"])
-        out = []
-        for e in diffs:
+        chosen: Dict[int, dict] = {}
+        for e in diffs:                 # duplicate steps: latest entry wins
             if e["step"] > step:
-                out.append((e["step"], self.backend.get(self._entry_key(e))))
+                chosen[e["step"]] = e
+        out = {s: self.backend.get(self._entry_key(e))
+               for s, e in chosen.items()}
         for e in batches:
             if e["last"] <= step:
                 continue
+            lo = max(step, e["first"] - 1)
+            if all(s in out for s in range(lo + 1, e["last"] + 1)):
+                continue                # fully covered: skip the fetch
             blob = self.backend.get(self._entry_key(e))
             for i, pay in enumerate(blob["payloads"]):
                 s = blob["first"] + i
-                if s > step:
-                    out.append((s, pay))
-        out.sort(key=lambda t: t[0])
-        return out
+                if s > step and s not in out:
+                    out[s] = pay
+        return sorted(out.items())
 
     # ------------------------------------------------------------------
     def gc(self, retention_fulls: Optional[int] = None) -> Dict[str, int]:

@@ -6,7 +6,10 @@ the Reusing Queue; a background checkpointing thread drains the queue,
 offloads to host memory (step ① of §V-B), batches b differentials
 (step ②) and persists each batch in a single I/O (step ③). The model
 state is checkpointed in full every `full_interval` steps,
-asynchronously. (f, b) come from the Eq. (10) optimum unless overridden.
+asynchronously. (f, b) come from the Eq. (10) optimum unless overridden,
+and the online tuner keeps re-solving Eq. (10) from observed merge
+times after every batch write (§VII's optimal-configuration module) —
+auto dimensions track the solution, pinned ones only record it.
 
 Recovery (Algorithm 1 / §VII): load the latest full checkpoint, replay
 the differential chain through Adam — serially or with the exact
@@ -14,8 +17,10 @@ log-depth parallel replay.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
@@ -25,7 +30,8 @@ import numpy as np
 from repro.checkpoint.store import CheckpointStore
 from repro.core import recovery as rec
 from repro.core.config_opt import OnlineTuner, SystemParams, practical_config
-from repro.core.reusing_queue import ReusingQueue
+from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
+                                      wait_drained)
 from repro.core.steps import make_train_step
 
 
@@ -45,15 +51,21 @@ class LowDiff:
                  sys_params: Optional[SystemParams] = None,
                  batch_mode: str = "concat", queue_size: int = 4,
                  parallel_recovery: bool = True,
-                 error_feedback: bool = True, compressor: str = "topk"):
+                 error_feedback: bool = True, compressor: str = "topk",
+                 flush_timeout: float = 120.0):
         self.model, self.store = model, store
         self.rho, self.lr = rho, lr
         if compressor == "quant8":
             error_feedback = False
         self.batch_mode = batch_mode
         self.parallel_recovery = parallel_recovery
+        self.flush_timeout = flush_timeout
         self.tuner = OnlineTuner(sys_params or SystemParams())
         fi, bs = practical_config(self.tuner.p)
+        # an explicit (f, b) pins the config; None means "start at the
+        # Eq. (10) optimum and let the online tuner keep re-solving it"
+        self._auto_full_interval = full_interval is None
+        self._auto_batch_size = batch_size is None
         self.full_interval = full_interval or fi
         self.batch_size = batch_size or bs
         self.queue = ReusingQueue(maxsize=queue_size)
@@ -61,6 +73,9 @@ class LowDiff:
                                        error_feedback=error_feedback,
                                        compressor=compressor)
         self._buffer: List[Any] = []  # [(step, host payload)]
+        # consumer thread appends, flush() (caller thread) swaps — the
+        # buffer is a cross-thread structure and must be locked
+        self._buffer_lock = threading.Lock()
         self._persist_pool = ThreadPoolExecutor(max_workers=2,
                                                 thread_name_prefix="persist")
         self._pending: List[Future] = []
@@ -68,6 +83,11 @@ class LowDiff:
         self._stop = threading.Event()
         self._step_counter: Optional[int] = None
         self._processed = 0          # differentials fully handled
+        # bounded: one entry per batch flush would leak memory over a
+        # multi-million-step per-iteration-checkpointing run
+        self._tuning_history: "deque[Dict[str, Any]]" = deque(maxlen=256)
+        self.tuning_resolves = 0
+        self.tuning_applied = 0
         self.ckpt_time = 0.0         # time spent inside the training loop
         self.full_saves = 0
 
@@ -75,6 +95,13 @@ class LowDiff:
     # checkpointing process (background thread)
     # ------------------------------------------------------------------
     def _start_consumer(self):
+        if self.queue.error is not None:
+            # never restart over a poisoned queue: the failed batch is
+            # lost, and persisting later ones would durably write a
+            # chain with a hole that recovery cannot detect
+            raise CheckpointingError(
+                "checkpointing consumer previously failed; differentials "
+                "were lost") from self.queue.error
         if self._consumer is None or not self._consumer.is_alive():
             self._stop.clear()
             self._consumer = threading.Thread(
@@ -86,21 +113,46 @@ class LowDiff:
         """Step ①: offload to CPU memory (frees the device buffer)."""
         host_cg = host_copy(cg)
         del cg
-        self._buffer.append((step, host_cg))
+        with self._buffer_lock:
+            self._buffer.append((step, host_cg))
+            full = len(self._buffer) >= self.batch_size
         # Step ②/③: batch then persist in one I/O
-        if len(self._buffer) >= self.batch_size:
+        if full:
             self._flush_batch()
         self._processed += 1
 
     def _flush_batch(self):
-        if not self._buffer:
-            return
-        buf, self._buffer = self._buffer, []
+        with self._buffer_lock:
+            if not self._buffer:
+                return
+            buf, self._buffer = self._buffer, []
         t0 = time.perf_counter()
         self.store.save_batch(buf[0][0], buf[-1][0],
                               [p for _, p in buf], mode=self.batch_mode)
         self.tuner.observe_merge_time(
             (time.perf_counter() - t0) / max(len(buf), 1))
+        self._apply_tuning()
+
+    def _apply_tuning(self):
+        """Close the paper's §VII adaptation loop: re-solve Eq. (10)
+        with the tuner's updated constants after each batch write and
+        apply the new (f, b) to the dimensions the caller left on auto.
+        Explicitly pinned dimensions are still recorded, so stats()
+        shows what the tuner *would* choose."""
+        interval, b = self.tuner.current()
+        applied = False
+        if self._auto_full_interval and interval != self.full_interval:
+            self.full_interval = interval
+            applied = True
+        if self._auto_batch_size and b != self.batch_size:
+            self.batch_size = b
+            applied = True
+        if applied:
+            self.tuning_applied += 1
+        self.tuning_resolves += 1
+        self._tuning_history.append(
+            {"step": self._step_counter, "full_interval": interval,
+             "batch_size": b, "applied": applied})
 
     # ------------------------------------------------------------------
     # training process hooks
@@ -125,11 +177,16 @@ class LowDiff:
     def _persist_full(self, step: int, snap):
         self.store.save_full(step, snap)
 
-    def flush(self):
+    def flush(self, timeout: Optional[float] = None):
         """Block until every queued differential/full write is durable
-        (including the storage backend's own async tiers)."""
-        while self._processed < self.queue.enqueued:
-            time.sleep(0.005)
+        (including the storage backend's own async tiers).
+
+        Never hangs: a handler exception on the consumer thread is
+        re-raised here as :class:`~repro.core.reusing_queue.
+        CheckpointingError`, and the wait is bounded by ``timeout``
+        (default ``flush_timeout``)."""
+        wait_drained(self.queue, lambda: self._processed, self._consumer,
+                     timeout if timeout is not None else self.flush_timeout)
         self._flush_batch()
         for f in self._pending:
             f.result()
@@ -137,12 +194,15 @@ class LowDiff:
         self.store.flush()
 
     def close(self):
-        self.flush()
-        self._stop.set()
-        self.queue.close()
-        if self._consumer is not None:
-            self._consumer.join(timeout=5)
-        self.store.close()
+        try:
+            self.flush()
+        finally:
+            self._stop.set()
+            self.queue.close()
+            if self._consumer is not None:
+                self._consumer.join(timeout=5)
+            self._persist_pool.shutdown(wait=True)
+            self.store.close()
 
     # ------------------------------------------------------------------
     # recovery process
@@ -152,6 +212,10 @@ class LowDiff:
         Works against any storage backend — the chain loader delegates
         shard re-assembly / tier lookup to the store's backend."""
         state, diffs = rec.load_latest_chain(self.store)
+        # LowDiff writes one differential per iteration: cut the chain
+        # at the first step gap (a write-back hole) rather than replay
+        # across it into silently wrong state
+        diffs = rec.contiguous_prefix(int(state["step"]), diffs)
         replay = (rec.replay_parallel if self.parallel_recovery
                   else rec.replay_serial)
         params, opt = replay(state["params"], state["opt"], diffs, lr=self.lr)
@@ -168,5 +232,11 @@ class LowDiff:
         return {"queue": self.queue.stats(), "store": self.store.stats(),
                 "full_interval": self.full_interval,
                 "batch_size": self.batch_size,
+                "tuning": {"auto": {"full_interval": self._auto_full_interval,
+                                    "batch_size": self._auto_batch_size},
+                           "applied": self.tuning_applied,
+                           "resolves": self.tuning_resolves,
+                           "history": list(self._tuning_history),
+                           "params": dataclasses.asdict(self.tuner.p)},
                 "train_loop_ckpt_time": self.ckpt_time,
                 "full_saves": self.full_saves}

@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
 from repro.core.lowdiff import host_copy
-from repro.core.reusing_queue import ReusingQueue
+from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
+                                      wait_drained)
 from repro.core.steps import make_train_step
 
 
@@ -87,9 +88,10 @@ class LowDiffPlus:
 
     def __init__(self, model, store: CheckpointStore, *, lr: float = 1e-3,
                  persist_interval: int = 1, snapshot_workers: int = 4,
-                 queue_size: int = 8):
+                 queue_size: int = 8, flush_timeout: float = 120.0):
         self.model, self.store, self.lr = model, store, lr
         self.persist_interval = persist_interval
+        self.flush_timeout = flush_timeout
         self.step_fn = make_train_step(model, mode="lowdiff_plus", lr=lr)
         self.queue = ReusingQueue(maxsize=queue_size)
         self._snap_pool = ThreadPoolExecutor(max_workers=snapshot_workers,
@@ -100,7 +102,10 @@ class LowDiffPlus:
         self._replica_lock = threading.Lock()
         self._consumer: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        # _handle appends on the consumer thread while flush() iterates
+        # and clears on the caller thread — must be locked
         self._pending = []
+        self._pending_lock = threading.Lock()
         self._processed = 0
         self.ckpt_time = 0.0
         self.persists = 0
@@ -117,6 +122,12 @@ class LowDiffPlus:
         self._replica_step = int(state["step"])
 
     def _start_consumer(self):
+        if self.queue.error is not None:
+            # a lost gradient means the replica is stale forever after:
+            # fail fast instead of resuming the apply stream over a hole
+            raise CheckpointingError(
+                "checkpointing consumer previously failed; the CPU "
+                "replica is missing gradients") from self.queue.error
         if self._consumer is None or not self._consumer.is_alive():
             self._stop.clear()
             self._consumer = threading.Thread(
@@ -153,29 +164,40 @@ class LowDiffPlus:
                     "mu": {k: np.array(v) for k, v in self._replica.mu.items()},
                     "nu": {k: np.array(v) for k, v in self._replica.nu.items()},
                     "count": self._replica.count}
-            self._pending.append(
-                self._persist_pool.submit(self._persist, step, snap))
+            with self._pending_lock:
+                self._pending.append(
+                    self._persist_pool.submit(self._persist, step, snap))
         self._processed += 1
 
     def _persist(self, step: int, payload):
         self.store.save_full(step, payload)
         self.persists += 1
 
-    def flush(self):
-        while self._processed < self.queue.enqueued:
-            time.sleep(0.005)
-        for f in self._pending:
-            f.result()
-        self._pending.clear()
+    def flush(self, timeout: Optional[float] = None):
+        """Block until every enqueued gradient is applied to the replica
+        and every scheduled persist is durable. Never hangs: consumer
+        failures re-raise here and the wait is deadline-bounded."""
+        wait_drained(self.queue, lambda: self._processed, self._consumer,
+                     timeout if timeout is not None else self.flush_timeout)
+        with self._pending_lock:
+            pending = list(self._pending)
+        for f in pending:
+            f.result()                  # a failure keeps the rest pending
+        with self._pending_lock:
+            self._pending = [f for f in self._pending if f not in pending]
         self.store.flush()
 
     def close(self):
-        self.flush()
-        self._stop.set()
-        self.queue.close()
-        if self._consumer is not None:
-            self._consumer.join(timeout=5)
-        self.store.close()
+        try:
+            self.flush()
+        finally:
+            self._stop.set()
+            self.queue.close()
+            if self._consumer is not None:
+                self._consumer.join(timeout=5)
+            self._snap_pool.shutdown(wait=True)
+            self._persist_pool.shutdown(wait=True)
+            self.store.close()
 
     # ------------------------------------------------------------------
     def recover_software(self, template_state):

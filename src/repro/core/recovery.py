@@ -28,14 +28,53 @@ from repro.optim.adam import AdamState, adam_update
 def load_latest_chain(store):
     """Load the newest full checkpoint and the ordered differentials
     after it from whatever storage backend the store wraps (the backend
-    re-assembles sharded leaves / hits the memory tier transparently).
+    re-assembles sharded leaves, hits the memory tier, or fetches and
+    checksum-verifies remote chunks transparently).
+
+    A full checkpoint that cannot be read back — missing blob, or a
+    remote tier whose bounded re-fetches never produced checksum-clean
+    chunks — does not abort recovery: the loader falls back to the next
+    older full and replays the longer differential chain from there.
     Returns (state, [(step, payload), ...]); raises FileNotFoundError
-    when no full checkpoint exists."""
-    entry = store.latest_full()
-    if entry is None:
+    when no full checkpoint is loadable."""
+    from repro.checkpoint.remote import RetryExhaustedError
+    fulls = sorted(store.manifest["fulls"], key=lambda e: e["step"],
+                   reverse=True)
+    if not fulls:
         raise FileNotFoundError("no full checkpoint")
-    state = store.load_full(entry)
-    return state, store.diffs_after(entry["step"])
+    last_err = None
+    for entry in fulls:
+        try:
+            state = store.load_full(entry)
+        except (FileNotFoundError, RetryExhaustedError) as e:
+            last_err = e
+            continue
+        return state, store.diffs_after(entry["step"])
+    raise FileNotFoundError(
+        f"none of {len(fulls)} full checkpoints is loadable "
+        f"(last error: {last_err})")
+
+
+def contiguous_prefix(start: int, diffs: List[Tuple[int, Any]],
+                      stride: int = 1) -> List[Tuple[int, Any]]:
+    """Longest prefix of ``diffs`` whose steps advance by ``stride``
+    from ``start``. Replaying *past* a hole — a differential whose
+    async write-back never landed before the crash, leaving a
+    mid-chain gap that ``_prune_missing`` (which assumes missing blobs
+    are a FIFO suffix) cannot repair — would silently corrupt the
+    recovered state, so callers that know their differential cadence
+    cut the chain at the first gap and recover to the last provably
+    consistent step instead. LowDiff emits one differential per
+    iteration, hence stride 1; strategies with a sparser cadence pass
+    their own stride."""
+    out = []
+    expect = start + stride
+    for s, p in diffs:
+        if s != expect:
+            break
+        out.append((s, p))
+        expect = s + stride
+    return out
 
 
 def _is_compressed(x):

@@ -12,13 +12,25 @@ finishes).
 FIFO order satisfies Requirement 1 (differentials must apply in sequence);
 bounded capacity provides the backpressure that caps device-memory held by
 in-flight checkpoints (the paper's Limitation 2).
+
+Liveness: a handler exception inside :meth:`drain` is captured in
+:attr:`error` instead of silently killing the consumer thread — the
+producer's ``flush`` re-raises it (see :func:`wait_drained`) rather than
+busy-waiting forever on a counter that will never advance. ``close`` never
+blocks, even on a full queue.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
+
+
+class CheckpointingError(RuntimeError):
+    """The background checkpointing consumer failed; raised from the
+    producer side (``flush``) with the original handler exception as
+    ``__cause__``."""
 
 
 class ReusingQueue:
@@ -29,6 +41,9 @@ class ReusingQueue:
         self.put_block_time = 0.0     # training stalls caused by backpressure
         self.max_depth = 0
         self._lock = threading.Lock()
+        self._closed = threading.Event()
+        #: the exception that killed the consumer's handler, if any
+        self.error: Optional[BaseException] = None
 
     def put(self, step: int, payload: Any):
         """Called from the training loop. Blocks only on backpressure."""
@@ -41,29 +56,84 @@ class ReusingQueue:
             self.max_depth = max(self.max_depth, self._q.qsize())
 
     def get(self, timeout: Optional[float] = None):
-        """Called from the checkpointing thread. Returns (step, payload)."""
+        """Called from the checkpointing thread. Returns (step, payload).
+        The close() sentinel is not a differential and is not counted in
+        ``dequeued``."""
         item = self._q.get(timeout=timeout)
-        with self._lock:
-            self.dequeued += 1
+        if item[0] is not None:
+            with self._lock:
+                self.dequeued += 1
         return item
 
     def close(self):
-        self._q.put((None, None))
+        """Signal the consumer to exit once the queue is drained. Never
+        blocks: on a full queue the sentinel is skipped and the closed
+        flag alone stops the drain loop."""
+        self._closed.set()
+        try:
+            self._q.put_nowait((None, None))
+        except queue.Full:
+            pass
 
-    def drain(self, handler, stop_event: Optional[threading.Event] = None):
-        """Consumer loop: call handler(step, payload) until close()."""
+    def drain(self, handler: Callable[[int, Any], None],
+              stop_event: Optional[threading.Event] = None):
+        """Consumer loop: call handler(step, payload) until close().
+        Items already enqueued when close() lands are still handled.
+        A handler exception is recorded in :attr:`error` and ends the
+        loop — the producer re-raises it from flush(). A poisoned queue
+        (error already set) refuses to drain: persisting differentials
+        *after* a lost one would durably write a chain with a hole."""
+        if self.error is not None:
+            return
         while True:
             try:
                 step, payload = self.get(timeout=0.2)
             except queue.Empty:
+                if self._closed.is_set():
+                    return
                 if stop_event is not None and stop_event.is_set():
                     return
                 continue
             if step is None:
                 return
-            handler(step, payload)
+            try:
+                handler(step, payload)
+            except BaseException as e:  # noqa: B036 - must survive anything
+                self.error = e
+                return
 
     def stats(self):
         return {"enqueued": self.enqueued, "dequeued": self.dequeued,
                 "put_block_time": self.put_block_time,
-                "max_depth": self.max_depth}
+                "max_depth": self.max_depth,
+                "consumer_error": repr(self.error) if self.error else None}
+
+
+def wait_drained(q: ReusingQueue, processed: Callable[[], int],
+                 consumer: Optional[threading.Thread], timeout: float,
+                 poll_s: float = 0.005):
+    """Producer-side wait until every enqueued item has been handled.
+
+    Raises :class:`CheckpointingError` (chaining the handler exception)
+    if the consumer died, and :class:`TimeoutError` when ``timeout``
+    elapses — a flush must never hang forever on a counter the dead
+    consumer can no longer advance.
+    """
+    deadline = time.monotonic() + timeout
+    while processed() < q.enqueued:
+        if q.error is not None:
+            raise CheckpointingError(
+                "checkpointing consumer failed; differentials after step "
+                "of failure were not persisted") from q.error
+        if consumer is None or not consumer.is_alive():
+            raise CheckpointingError(
+                "checkpointing consumer thread is not running but "
+                f"{q.enqueued - processed()} differential(s) remain queued")
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"flush did not drain within {timeout:.1f}s "
+                f"({processed()}/{q.enqueued} handled)")
+        time.sleep(poll_s)
+    if q.error is not None:
+        raise CheckpointingError(
+            "checkpointing consumer failed") from q.error

@@ -37,11 +37,15 @@ STRATEGIES = ("none", "lowdiff", "lowdiff_plus", "checkfreq", "gemini",
 def build_strategy(name: str, model, store, *, lr, rho, full_interval,
                    batch_size):
     if name == "lowdiff":
+        # 0 = auto: seed (f, b) from the Eq. (10) closed form and keep
+        # adapting them from observed merge times (online tuning)
         return LowDiff(model, store, rho=rho, lr=lr,
-                       full_interval=full_interval, batch_size=batch_size,
+                       full_interval=full_interval or None,
+                       batch_size=batch_size or None,
                        sys_params=SystemParams())
     if name == "lowdiff_plus":
-        return LowDiffPlus(model, store, lr=lr, persist_interval=batch_size)
+        return LowDiffPlus(model, store, lr=lr,
+                           persist_interval=batch_size or 1)
     if name == "checkfreq":
         return CheckFreq(model, store, lr=lr, interval=10)
     if name == "gemini":
@@ -68,7 +72,12 @@ def run(args):
                         backend=getattr(args, "backend", "local"),
                         shards=getattr(args, "shards", 4),
                         capacity_mb=getattr(args, "memory_capacity_mb", None),
-                        retention_fulls=getattr(args, "retention", 0))
+                        retention_fulls=getattr(args, "retention", 0),
+                        remote_url=getattr(args, "remote_url", None),
+                        chunk_mb=getattr(args, "chunk_mb", 4.0),
+                        max_retries=getattr(args, "max_retries", 4),
+                        remote_fault_rate=getattr(args, "remote_fault_rate",
+                                                  0.0))
              if args.ckpt_dir else None)
     strat = (build_strategy(args.strategy, model, store, lr=args.lr,
                             rho=args.rho, full_interval=args.full_interval,
@@ -131,9 +140,12 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--rho", type=float, default=0.01)
     ap.add_argument("--strategy", choices=STRATEGIES, default="lowdiff")
-    ap.add_argument("--full-interval", type=int, default=20)
+    ap.add_argument("--full-interval", type=int, default=20,
+                    help="full-checkpoint interval f (0 = Eq. (10) optimum "
+                         "+ online tuning)")
     ap.add_argument("--batch-size", type=int, default=2,
-                    help="differential batching size b")
+                    help="differential batching size b (0 = Eq. (10) "
+                         "optimum + online tuning)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--backend", choices=BACKENDS, default="local",
                     help="checkpoint storage backend (local FS, CPU-memory "
@@ -141,7 +153,18 @@ def main():
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for --backend sharded")
     ap.add_argument("--memory-capacity-mb", type=float, default=None,
-                    help="RAM-tier byte budget for --backend memory")
+                    help="RAM-tier byte budget for --backend memory/remote")
+    ap.add_argument("--remote-url", default=None,
+                    help="object store for --backend remote: fake://bucket "
+                         "(in-process) or file:///path (directory-backed); "
+                         "default file://<ckpt-dir>")
+    ap.add_argument("--chunk-mb", type=float, default=4.0,
+                    help="remote-tier content chunk size in MiB")
+    ap.add_argument("--max-retries", type=int, default=4,
+                    help="bounded retries per remote chunk transfer")
+    ap.add_argument("--remote-fault-rate", type=float, default=0.0,
+                    help="injected transient-fault probability on fake:// "
+                         "stores (exercises retry/backoff)")
     ap.add_argument("--retention", type=int, default=0,
                     help="keep this many full checkpoints + their chains "
                          "(0 = never garbage-collect)")

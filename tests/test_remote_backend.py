@@ -1,0 +1,411 @@
+"""Remote object-store tier tests.
+
+Covers the acceptance criteria of the remote subsystem:
+  * chunked put/get round-trip (bit-identical, multi-chunk)
+  * per-chunk checksum verification with re-fetch of corrupted chunks
+  * bounded retry with exhaustion raising instead of looping
+  * commit-point semantics: crash before write-back leaves no index and
+    the reopened store prunes the dangling manifest entry
+  * a LowDiff run through MemoryTierBackend(RemoteObjectBackend(...))
+    with injected transient faults recovers params/opt bit-identical to
+    the same run through LocalFSBackend
+"""
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import ml_dtypes
+
+from repro.checkpoint import make_store
+from repro.checkpoint.backends import (LocalFSBackend, MemoryTierBackend,
+                                       make_backend)
+from repro.checkpoint.remote import (ChecksumError, FakeObjectStore,
+                                     FaultInjector, FilesystemObjectStore,
+                                     RemoteObjectBackend,
+                                     RetryExhaustedError, TransientStoreError,
+                                     _FAKE_BUCKETS, make_remote_backend)
+from repro.checkpoint.store import CheckpointStore
+from repro.compression.sparse import SparseGrad
+from repro.configs import get_config
+from repro.core.lowdiff import LowDiff
+from repro.core.recovery import load_latest_chain
+from repro.core.steps import init_state
+from repro.data.synthetic import make_batch
+from repro.models.registry import build_model
+
+SEQ, BATCH = 32, 2
+
+
+def sample_tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": rng.normal(size=(48, 260)).astype(np.float32),
+        "bf16": rng.normal(size=(1024,)).astype(ml_dtypes.bfloat16),
+        "ints": np.arange(11, dtype=np.int32),
+        "sparse": SparseGrad(
+            values=np.float32(rng.normal(size=(4, 10))),
+            indices=np.int32(rng.integers(0, 1024, size=(4, 10))),
+            shape=(4096,), block=1024),
+        "nested": {"a": [np.float32(1.5), (2, 3)], "b": None,
+                   "c": "label", "d": True},
+    }
+
+
+def assert_tree_identical(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if isinstance(x, (np.ndarray, jax.Array)) or hasattr(x, "dtype"):
+            x, y = np.asarray(x), np.asarray(y)
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(x, y)
+        else:
+            assert x == y
+
+
+def fast_backend(store, **kw):
+    kw.setdefault("backoff_s", 1e-4)
+    return RemoteObjectBackend(store, **kw)
+
+
+# --------------------------------------------------------------------------
+# chunk round-trip
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_bytes", [1 << 10, 1 << 22])
+def test_remote_chunked_roundtrip(chunk_bytes):
+    be = fast_backend(FakeObjectStore(), chunk_bytes=chunk_bytes)
+    tree = sample_tree()
+    n = be.put("full_00000001", tree)
+    assert n > 0
+    n_chunks = sum(1 for o in be.store.list_objects()
+                   if o.endswith(".chunk"))
+    if chunk_bytes == 1 << 10:
+        assert n_chunks > 1            # genuinely split into chunks
+    else:
+        assert n_chunks == 1
+    assert be.exists("full_00000001")
+    assert be.keys() == ["full_00000001"]
+    assert_tree_identical(tree, be.get("full_00000001"))
+    be.delete("full_00000001")
+    assert not be.exists("full_00000001")
+    assert be.store.list_objects() == []   # chunks swept with the index
+
+
+def test_filesystem_object_store_roundtrip(tmp_path):
+    be = fast_backend(FilesystemObjectStore(str(tmp_path / "bucket")),
+                      chunk_bytes=2048)
+    tree = sample_tree()
+    be.put("full_00000003", tree)
+    assert_tree_identical(tree, be.get("full_00000003"))
+    # a second client over the same directory sees the same objects
+    be2 = fast_backend(FilesystemObjectStore(str(tmp_path / "bucket")))
+    assert be2.keys() == ["full_00000003"]
+    assert_tree_identical(tree, be2.get("full_00000003"))
+
+
+# --------------------------------------------------------------------------
+# checksums and retries
+# --------------------------------------------------------------------------
+
+def test_checksum_mismatch_refetches():
+    """A chunk corrupted in flight fails sha256 verification and is
+    re-fetched; the caller sees clean bytes."""
+    store = FakeObjectStore(FaultInjector(flip_gets=3))
+    be = fast_backend(store, chunk_bytes=512)
+    tree = sample_tree()
+    be.put("k", tree)
+    assert_tree_identical(tree, be.get("k"))
+    assert be.checksum_failures >= 1
+    assert be.retries >= 1
+
+
+def test_transient_put_drops_are_retried():
+    store = FakeObjectStore(FaultInjector(drop_puts=2))
+    be = fast_backend(store, chunk_bytes=1 << 20)
+    tree = sample_tree()
+    be.put("k", tree)
+    assert be.retries == 2
+    assert_tree_identical(tree, be.get("k"))
+
+
+def test_retry_exhaustion_raises():
+    store = FakeObjectStore()
+    be = fast_backend(store, max_retries=2)
+    be.put("k", sample_tree())
+    store.faults = FaultInjector(drop_gets=50)
+    with pytest.raises(RetryExhaustedError):
+        be.get("k")
+    store.faults = FaultInjector(drop_puts=50)
+    with pytest.raises(RetryExhaustedError):
+        be.put("k2", sample_tree())
+
+
+def test_checksum_error_is_transient():
+    """ChecksumError must be caught by the retry loop (it subclasses
+    TransientStoreError), and surface as RetryExhaustedError only when
+    every re-fetch stays corrupt."""
+    store = FakeObjectStore()
+    be = fast_backend(store, max_retries=1, chunk_bytes=1 << 20)
+    be.put("k", sample_tree())
+    store.faults = FaultInjector(flip_gets=50)   # every fetch corrupt
+    with pytest.raises(RetryExhaustedError) as ei:
+        be.get("k")
+    assert isinstance(ei.value.__cause__, ChecksumError)
+
+
+def test_missing_key_is_not_retried():
+    be = fast_backend(FakeObjectStore(), max_retries=5)
+    with pytest.raises(FileNotFoundError):
+        be.get("absent")
+    assert be.retries == 0             # absence is permanent, not transient
+
+
+def test_exists_retries_transient_faults():
+    """exists() must retry a flaky wire rather than mis-report a
+    reachable blob as missing — _prune_missing would otherwise drop
+    live chain entries on reopen."""
+    class FlakyHead(FakeObjectStore):
+        def __init__(self):
+            super().__init__()
+            self.head_faults = 2
+
+        def has_object(self, name):
+            if self.head_faults > 0:
+                self.head_faults -= 1
+                raise TransientStoreError("head dropped")
+            return super().has_object(name)
+
+    store = FlakyHead()
+    be = fast_backend(store)
+    be.put("k", sample_tree())
+    store.head_faults = 2
+    assert be.exists("k") is True      # survived the two dropped HEADs
+    store.head_faults = 2
+    assert be.exists("absent") is False
+
+
+# --------------------------------------------------------------------------
+# factory / URL wiring
+# --------------------------------------------------------------------------
+
+def test_make_backend_remote_layers_memory_tier(tmp_path):
+    be = make_backend("remote", str(tmp_path / "r"),
+                      remote_url="fake://wiring-test", chunk_mb=0.01)
+    assert isinstance(be, MemoryTierBackend)
+    assert isinstance(be.lower, RemoteObjectBackend)
+    tree = sample_tree()
+    be.put("full_00000001", tree)
+    be.flush()
+    # the blob landed on the remote tier, not just in RAM
+    assert be.lower.exists("full_00000001")
+    assert_tree_identical(tree, be.lower.get("full_00000001"))
+    be.close()
+    _FAKE_BUCKETS.pop("wiring-test", None)
+
+
+def test_make_remote_backend_rejects_unknown_scheme():
+    with pytest.raises(ValueError, match="scheme"):
+        make_remote_backend("s3://bucket")
+    with pytest.raises(ValueError, match="scheme"):
+        make_remote_backend("not-a-url")
+
+
+def test_fake_buckets_shared_within_process():
+    a = make_remote_backend("fake://shared-bucket")
+    b = make_remote_backend("fake://shared-bucket")
+    a.put("k", {"x": np.arange(3)})
+    assert b.exists("k")
+    _FAKE_BUCKETS.pop("shared-bucket", None)
+
+
+def test_fake_bucket_fault_config_not_stale():
+    """A cached fake bucket must take the *latest* caller's fault
+    configuration: first use without faults, then with, then without."""
+    a = make_remote_backend("fake://fault-cfg")           # no faults
+    assert a.store.faults is None
+    b = make_remote_backend("fake://fault-cfg", fault_rate=1.0)
+    assert a.store is b.store and b.store.faults is not None
+    c = make_remote_backend("fake://fault-cfg")           # detaches again
+    assert c.store.faults is None
+    _FAKE_BUCKETS.pop("fault-cfg", None)
+
+
+# --------------------------------------------------------------------------
+# commit point + crash recovery
+# --------------------------------------------------------------------------
+
+def test_crash_before_writeback_pruned_on_reopen(tmp_path):
+    """Journal records a full whose async write-back never landed on the
+    object store (crash): the reopened store must fall back to the
+    previous durable full via _prune_missing."""
+    root = str(tmp_path / "crash")
+    store = make_store(root, backend="remote", chunk_mb=0.01)
+    tree = sample_tree(1)
+    store.save_full(4, tree)
+    store.save_full(8, sample_tree(2))
+    store.save_diff(9, {"g": np.zeros(4, np.float32)})
+    store.flush()
+    store.journal.close()   # journal survives; skip close() (= flush)
+    # simulate the write-back suffix never landing: remove the remote
+    # objects for full@8 and diff@9 (index first = commit point gone)
+    remote = store.backend.lower
+    remote.delete("full_00000008")
+    remote.delete("diff_00000009")
+    reopened = make_store(root, backend="remote", chunk_mb=0.01)
+    assert reopened.latest_full()["step"] == 4
+    assert_tree_identical(tree, reopened.load_full(reopened.latest_full()))
+    assert reopened.diffs_after(4) == []
+    reopened.close()
+
+
+def test_reput_crash_preserves_previous_version(tmp_path):
+    """Chunks are generation-prefixed: a re-put that crashes before its
+    index commit must leave the previously committed version fully
+    readable (the old failure mode: overwritten chunks under the old
+    index -> permanent ChecksumError)."""
+    fake = FakeObjectStore()
+    be = fast_backend(fake, chunk_bytes=512)
+    tree1 = sample_tree(1)
+    be.put("k", tree1)
+
+    orig = fake.put_object
+
+    def crash_on_index(name, data):
+        if name.endswith("index.json"):
+            raise KeyboardInterrupt()  # hard crash mid-re-put
+        orig(name, data)
+
+    fake.put_object = crash_on_index
+    with pytest.raises(KeyboardInterrupt):
+        be.put("k", sample_tree(2))
+    fake.put_object = orig
+    assert_tree_identical(tree1, be.get("k"))   # old version intact
+
+    # a successful re-put supersedes AND sweeps the stale generation
+    tree3 = sample_tree(3)
+    be.put("k", tree3)
+    assert_tree_identical(tree3, be.get("k"))
+    gens = {n.split("/")[1].split(".")[0]
+            for n in fake.list_objects("k/") if n.endswith(".chunk")}
+    assert len(gens) == 1              # only the live generation remains
+
+
+def test_memory_tier_flush_surfaces_writeback_failure(tmp_path):
+    """A failed async write-back must raise from flush() even after
+    _prune_done has reaped the future — silently dropping it would
+    leave a hole in the middle of the journal-referenced chain."""
+    class FailingLower(LocalFSBackend):
+        fail_keys = frozenset()
+
+        def put(self, key, obj):
+            if key in self.fail_keys:
+                raise RetryExhaustedError(f"remote down for {key}")
+            return super().put(key, obj)
+
+    lower = FailingLower(str(tmp_path / "low"))
+    lower.fail_keys = frozenset({"k1"})
+    be = MemoryTierBackend(lower)
+    be.put("k1", sample_tree(1))
+    deadline = time.monotonic() + 10.0
+    while be._inflight["k1"].done() is False:   # let the spill fail
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    be.put("k2", sample_tree(2))       # reaps k1's future via _prune_done
+    with pytest.raises(RuntimeError, match="write-back"):
+        be.flush()
+    assert be.stats()["writeback_errors"] == 1
+
+
+def test_interrupted_upload_leaves_no_index(tmp_path):
+    """A crash mid-upload (chunks written, index not) must leave the key
+    invisible: exists() false, keys() empty, get() FileNotFoundError."""
+    fs = FilesystemObjectStore(str(tmp_path / "b"))
+    be = fast_backend(fs, chunk_bytes=256)
+
+    class Boom(Exception):
+        pass
+
+    orig = fs.put_object
+    calls = []
+
+    def failing_put(name, data):
+        if name.endswith("index.json"):
+            raise Boom()               # die right before the commit point
+        calls.append(name)
+        orig(name, data)
+
+    fs.put_object = failing_put
+    with pytest.raises(Boom):          # non-transient: propagates as-is
+        be.put("full_00000001", sample_tree())
+    fs.put_object = orig
+    assert len(calls) >= 1             # chunks did land
+    assert not be.exists("full_00000001")
+    assert be.keys() == []
+    with pytest.raises(FileNotFoundError):
+        be.get("full_00000001")
+
+
+def test_load_latest_chain_falls_back_to_older_full(tmp_path):
+    """A newest full whose remote blob is gone must not abort recovery:
+    the chain loader falls back to the previous full."""
+    fake = FakeObjectStore()
+    be = MemoryTierBackend(fast_backend(fake, chunk_bytes=4096))
+    store = CheckpointStore(backend=be)
+    tree = sample_tree(3)
+    store.save_full(4, tree)
+    store.save_diff(5, {"g": np.full(4, 5.0, np.float32)})
+    store.save_full(6, sample_tree(4))
+    store.flush()
+    # newest full vanishes from the bucket AND from the RAM tier
+    be.delete("full_00000006")
+    state, diffs = load_latest_chain(store)
+    assert_tree_identical(tree, state)
+    assert [s for s, _ in diffs] == [5]
+    store.close()
+
+
+# --------------------------------------------------------------------------
+# acceptance: faulted remote run bit-identical to LocalFS
+# --------------------------------------------------------------------------
+
+def run_lowdiff(store):
+    model = build_model(get_config("qwen2-1.5b").reduced())
+    ld = LowDiff(model, store, rho=0.05, lr=1e-3, full_interval=4,
+                 batch_size=2, parallel_recovery=False)
+    state = init_state(model, jax.random.PRNGKey(0), mode="lowdiff")
+    for t in range(9):
+        state, _ = ld.train_step(state, make_batch(model.cfg, SEQ, BATCH,
+                                                   step=t))
+    ld.flush()
+    rec, n = ld.recover()
+    ld.close()
+    return state, rec, n
+
+
+def test_lowdiff_faulted_remote_recovery_bit_identical(tmp_path):
+    """The acceptance criterion: LowDiff through
+    MemoryTierBackend(RemoteObjectBackend(...)) with injected transient
+    faults (dropped chunks on both directions, checksum flips) recovers
+    params/opt bit-identical to a LocalFSBackend run."""
+    local_store = CheckpointStore(
+        backend=LocalFSBackend(str(tmp_path / "local")))
+    live_a, rec_a, n_a = run_lowdiff(local_store)
+
+    faults = FaultInjector(drop_puts=3, drop_gets=3, flip_gets=3, rate=0.02,
+                           seed=11)
+    remote = fast_backend(FakeObjectStore(faults), chunk_bytes=1 << 16)
+    remote_store = CheckpointStore(backend=MemoryTierBackend(remote))
+    live_b, rec_b, n_b = run_lowdiff(remote_store)
+
+    assert faults.injected > 0         # the run really was faulted
+    assert remote.retries > 0          # and the backend really retried
+    assert n_a == n_b
+    assert int(rec_a["step"]) == int(rec_b["step"]) == 9
+    assert_tree_identical(live_a["params"], live_b["params"])
+    assert_tree_identical(rec_a["params"], rec_b["params"])
+    assert_tree_identical(rec_a["opt"].mu, rec_b["opt"].mu)
+    assert_tree_identical(rec_a["opt"].nu, rec_b["opt"].nu)
