@@ -29,6 +29,7 @@ MODULES = [
     ("exp8_compression_ratio", "benchmarks.compression_ratio"),
     ("exp9_10_scaling", "benchmarks.scaling"),
     ("exp11_remote_tier", "benchmarks.remote_tier"),
+    ("exp12_serialization", "benchmarks.serialization"),
 ]
 
 

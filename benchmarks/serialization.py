@@ -1,0 +1,128 @@
+"""Exp. 12: zero-copy serialization fast path (frame vs npz).
+
+Meters the three quantities the zero-copy work targets:
+
+* **serialize / deserialize throughput** — LocalFS backend writes and
+  reads of a multi-MB pytree in each format (frame streams leaf
+  buffers via memoryview; npz re-encodes through a zip container).
+* **host-side copies of tensor bytes per checkpoint** — via the copy
+  meter, on the remote path where the seed made 3 (D2H snapshot + npz
+  blob materialization + chunk re-slice) and the frame path makes 1
+  (the D2H snapshot only; chunks are views of the snapshot buffers).
+* **snapshot stall** — time the training thread spends starting a full
+  state snapshot: the seed's synchronous per-leaf ``np.asarray`` walk
+  vs the arena's ``copy_to_host_async`` + deferred materialization.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint import io as cio
+from repro.checkpoint.backends import LocalFSBackend
+from repro.checkpoint.remote import FakeObjectStore, RemoteObjectBackend
+from repro.core.snapshot import SnapshotArena, host_copy
+
+TREE_MB = 32
+
+
+def _host_tree(mb: float, leaves: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = int(mb * 2**20 / 4 / leaves)
+    return {f"w{i}": rng.normal(size=(n,)).astype(np.float32)
+            for i in range(leaves)}
+
+
+def _device_tree(mb: float, leaves: int = 8, seed: int = 0):
+    return {k: jnp.asarray(v)
+            for k, v in _host_tree(mb, leaves, seed).items()}
+
+
+def main(out):
+    tree = _host_tree(TREE_MB)
+    nbytes = sum(a.nbytes for a in tree.values())
+
+    # ---------------- local serialize / deserialize -------------------
+    tmp = tempfile.mkdtemp(prefix="exp12_")
+    try:
+        for fmt in ("npz", "frame"):
+            be = LocalFSBackend(f"{tmp}/{fmt}", fmt=fmt)
+            t_put = timeit(lambda b=be: b.put("k", tree), warmup=1, iters=3)
+            out(row(f"exp12.serialize.{fmt}", t_put,
+                    f"{nbytes / 2**20 / t_put:.0f}MB/s"))
+            # full materialization (touch every leaf)
+            t_get = timeit(
+                lambda b=be: jax.tree.map(np.sum, b.get("k")),
+                warmup=1, iters=3)
+            out(row(f"exp12.deserialize.{fmt}", t_get,
+                    f"{nbytes / 2**20 / t_get:.0f}MB/s"))
+        # lazy one-leaf read: the memmap advantage replay relies on
+        fbe = LocalFSBackend(f"{tmp}/frame", fmt="frame")
+        t_lazy = timeit(lambda: np.sum(fbe.get("k")["w0"]),
+                        warmup=1, iters=3)
+        out(row("exp12.deserialize.frame.one_leaf", t_lazy,
+                f"touches 1/8 of {TREE_MB}MB"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # ---------------- remote put (the byte-blob transport) ------------
+    for fmt in ("npz", "frame"):
+        be = RemoteObjectBackend(FakeObjectStore(), chunk_bytes=4 << 20,
+                                 fmt=fmt)
+        i = [0]
+
+        def rput(b=be, i=i):
+            b.put(f"k{i[0]}", tree)
+            i[0] += 1
+
+        t_put = timeit(rput, warmup=1, iters=3)
+        out(row(f"exp12.remote_put.{fmt}", t_put,
+                f"{nbytes / 2**20 / t_put:.0f}MB/s"))
+    cio.COPY_METER.reset()
+
+    # ---------------- copies per checkpoint (remote path) -------------
+    dtree = _device_tree(TREE_MB)
+    for fmt in ("npz", "frame"):
+        be = RemoteObjectBackend(FakeObjectStore(), chunk_bytes=4 << 20,
+                                 fmt=fmt)
+        cio.COPY_METER.reset()
+        snap = host_copy(dtree)        # copy 1: the D2H snapshot
+        be.put("k", snap)
+        copies = cio.COPY_METER.bytes / nbytes
+        cio.COPY_METER.reset()
+        out(row(f"exp12.copies.{fmt}", 0.0,
+                f"{copies:.2f} host copies of tensor bytes/ckpt"))
+
+    # ---------------- snapshot stall on the training thread -----------
+    def sync_snap():
+        host_copy(dtree)
+
+    t_sync = timeit(sync_snap, warmup=1, iters=5)
+    out(row("exp12.snapshot.sync", t_sync,
+            f"{nbytes / 2**20 / t_sync:.0f}MB/s blocking"))
+
+    arena = SnapshotArena(slots=2)
+
+    def async_start():
+        # what train_step pays: issue the transfers, hand off, return
+        p = arena.snapshot_async(dtree)
+        p.release()                    # persist thread's work, not timed
+
+    t_async = timeit(async_start, warmup=1, iters=5)
+    out(row("exp12.snapshot.async_start", t_async,
+            f"stall {t_async / max(t_sync, 1e-12) * 100:.1f}% of sync"))
+    # and the deferred wait really produces the same bytes
+    pending = arena.snapshot_async(dtree)
+    snap = pending.result()
+    assert all(np.array_equal(np.asarray(dtree[k]), snap[k]) for k in snap)
+    pending.release()
+    cio.COPY_METER.reset()
+
+
+if __name__ == "__main__":
+    main(print)

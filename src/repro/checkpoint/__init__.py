@@ -16,6 +16,7 @@ from repro.checkpoint.backends import (BACKENDS, LocalFSBackend,
                                        MemoryTierBackend, ShardedBackend,
                                        StorageBackend, make_backend,
                                        make_pspec_splitter)
+from repro.checkpoint.io import FORMATS, FrameCorruptionError
 from repro.checkpoint.remote import (ChecksumError, FakeObjectStore,
                                      FaultInjector, FilesystemObjectStore,
                                      ObjectStore, RemoteObjectBackend,
@@ -24,24 +25,27 @@ from repro.checkpoint.remote import (ChecksumError, FakeObjectStore,
                                      make_remote_backend)
 from repro.checkpoint.store import CheckpointStore
 
-__all__ = ["BACKENDS", "CheckpointStore", "ChecksumError",
+__all__ = ["BACKENDS", "FORMATS", "CheckpointStore", "ChecksumError",
            "FakeObjectStore", "FaultInjector", "FilesystemObjectStore",
-           "LocalFSBackend", "MemoryTierBackend", "ObjectStore",
-           "RemoteObjectBackend", "RetryExhaustedError", "ShardedBackend",
-           "StorageBackend", "TransientStoreError", "make_backend",
-           "make_pspec_splitter", "make_remote_backend", "make_store"]
+           "FrameCorruptionError", "LocalFSBackend", "MemoryTierBackend",
+           "ObjectStore", "RemoteObjectBackend", "RetryExhaustedError",
+           "ShardedBackend", "StorageBackend", "TransientStoreError",
+           "make_backend", "make_pspec_splitter", "make_remote_backend",
+           "make_store"]
 
 
 def make_store(root: Optional[str], *, backend: str = "local",
                shards: int = 4, capacity_mb: Optional[float] = None,
                retention_fulls: int = 0, compact_every: int = 256,
                remote_url: Optional[str] = None, chunk_mb: float = 4.0,
-               max_retries: int = 4,
-               remote_fault_rate: float = 0.0) -> CheckpointStore:
-    """Build a CheckpointStore over the named backend."""
+               max_retries: int = 4, remote_fault_rate: float = 0.0,
+               fmt: str = "frame") -> CheckpointStore:
+    """Build a CheckpointStore over the named backend. ``fmt`` picks the
+    write serialization ("frame" streamed zero-copy / "npz" legacy);
+    reads sniff, so existing npz chains stay recoverable either way."""
     be = make_backend(backend, root, shards=shards, capacity_mb=capacity_mb,
                       remote_url=remote_url, chunk_mb=chunk_mb,
                       max_retries=max_retries,
-                      remote_fault_rate=remote_fault_rate)
+                      remote_fault_rate=remote_fault_rate, fmt=fmt)
     return CheckpointStore(root, backend=be, retention_fulls=retention_fulls,
                            compact_every=compact_every)

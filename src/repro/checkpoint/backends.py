@@ -4,8 +4,8 @@ A backend is a key -> pytree blob store; :class:`repro.checkpoint.store.
 CheckpointStore` layers the full/diff/batch chain semantics, the
 manifest journal, and garbage collection on top. Three implementations:
 
-* :class:`LocalFSBackend` — one atomic ``.npz`` per key on a local
-  directory (the seed behavior, extracted).
+* :class:`LocalFSBackend` — one atomic file per key on a local
+  directory: a streamed ``.ckpt`` frame (default) or legacy ``.npz``.
 * :class:`MemoryTierBackend` — TierCheck-style CPU-RAM tier: writes land
   in host memory at memcpy speed and are flushed asynchronously to an
   optional lower backend; reads hit RAM first. A byte capacity bounds
@@ -42,6 +42,10 @@ class StorageBackend(abc.ABC):
     #: directory where durable metadata (the manifest journal) can live;
     #: None for purely in-memory backends.
     persist_root: Optional[str] = None
+    #: serialization format new blobs are written in ("frame" or "npz");
+    #: recorded per manifest entry by the chain store. Read side always
+    #: sniffs, so mixed-format chains recover transparently.
+    fmt: str = "frame"
 
     @abc.abstractmethod
     def put(self, key: str, obj: Any) -> int:
@@ -65,6 +69,12 @@ class StorageBackend(abc.ABC):
         """Human-readable locator for manifest entries / logs."""
         return f"{self.name}://{key}"
 
+    def protect(self, keys) -> None:
+        """Advise the backend that ``keys`` form the newest full
+        checkpoint's replay chain: a capacity-bounded tier must never
+        evict them from its fastest level. Default: no-op (durable
+        backends have nothing to evict)."""
+
     def flush(self) -> None:
         """Block until every accepted put is durable at the lowest tier."""
 
@@ -80,37 +90,80 @@ class StorageBackend(abc.ABC):
 # ----------------------------------------------------------------------
 
 class LocalFSBackend(StorageBackend):
-    name = "local"
+    """One atomic file per key: ``<key>.ckpt`` streamed frames (the
+    default fast path — leaf buffers go straight from the snapshot into
+    the file, reads are lazy ``np.memmap`` views) or ``<key>.npz``
+    (``fmt="npz"``, the seed format). Reads sniff the magic, so a
+    directory holding a mixed-format chain keeps recovering."""
 
-    def __init__(self, root: str):
+    name = "local"
+    SUFFIXES = {"frame": ".ckpt", "npz": ".npz"}
+
+    def __init__(self, root: str, *, fmt: str = "frame",
+                 mmap_reads: bool = True):
+        if fmt not in self.SUFFIXES:
+            raise ValueError(f"fmt must be one of {tuple(self.SUFFIXES)}")
         self.root = root
         self.persist_root = root
+        self.fmt = fmt
+        self.mmap_reads = mmap_reads
         os.makedirs(root, exist_ok=True)
 
-    def _path(self, key: str) -> str:
-        return os.path.join(self.root, f"{key}.npz")
+    def _path(self, key: str, fmt: Optional[str] = None) -> str:
+        return os.path.join(self.root,
+                            f"{key}{self.SUFFIXES[fmt or self.fmt]}")
+
+    def _find(self, key: str) -> Optional[str]:
+        # configured format first: if both suffixes somehow exist, the
+        # one this backend writes is the authoritative copy
+        for fmt in sorted(self.SUFFIXES, key=lambda f: f != self.fmt):
+            p = self._path(key, fmt)
+            if os.path.exists(p):
+                return p
+        return None
 
     def put(self, key: str, obj: Any) -> int:
-        return cio.save(self._path(key), obj)
+        if self.fmt == "frame":
+            n = cio.save_frame(self._path(key), obj)
+        else:
+            n = cio.save(self._path(key), obj)
+        # a re-put after a format switch must not leave the key's
+        # other-suffix file behind: a stale cross-format blob would
+        # shadow (or survive delete alongside) the fresh write
+        for fmt in self.SUFFIXES:
+            if fmt != self.fmt:
+                try:
+                    os.unlink(self._path(key, fmt))
+                except FileNotFoundError:
+                    pass
+        return n
 
     def get(self, key: str) -> Any:
-        return cio.load(self._path(key))
+        path = self._find(key)
+        if path is None:
+            raise FileNotFoundError(f"no blob {key!r} in {self.root}")
+        return cio.load_any(path, mmap=self.mmap_reads)
 
     def delete(self, key: str) -> None:
-        try:
-            os.unlink(self._path(key))
-        except FileNotFoundError:
-            pass
+        for fmt in self.SUFFIXES:
+            try:
+                os.unlink(self._path(key, fmt))
+            except FileNotFoundError:
+                pass
 
     def exists(self, key: str) -> bool:
-        return os.path.exists(self._path(key))
+        return self._find(key) is not None
 
     def keys(self) -> List[str]:
-        return sorted(f[:-4] for f in os.listdir(self.root)
-                      if f.endswith(".npz"))
+        out = set()
+        for f in os.listdir(self.root):
+            for suffix in self.SUFFIXES.values():
+                if f.endswith(suffix):
+                    out.add(f[:-len(suffix)])
+        return sorted(out)
 
     def url(self, key: str) -> str:
-        return self._path(key)
+        return self._find(key) or self._path(key)
 
 
 # ----------------------------------------------------------------------
@@ -141,6 +194,7 @@ class MemoryTierBackend(StorageBackend):
                 "a pure-RAM tier must hold every live checkpoint")
         self.lower = lower
         self.persist_root = lower.persist_root if lower is not None else None
+        self.fmt = lower.fmt if lower is not None else "memory"
         self.capacity_bytes = capacity_bytes
         self._mem: "OrderedDict[str, Tuple[dict, List[np.ndarray], int]]" \
             = OrderedDict()
@@ -155,8 +209,13 @@ class MemoryTierBackend(StorageBackend):
         # already references the blob, and losing it mid-chain would
         # hand recovery a hole
         self._wb_errors: List[Tuple[str, BaseException]] = []
+        #: keys in the newest full checkpoint's replay chain — never
+        #: evicted from RAM (chain-aware eviction: recovery of the
+        #: latest chain must hit memory, not the slow tier)
+        self._protected: frozenset = frozenset()
         self.evictions = 0
         self.spills = 0
+        self.evictions_skipped = 0
 
     def put(self, key: str, obj: Any) -> int:
         struct, arrays = cio.pack(obj)
@@ -193,6 +252,15 @@ class MemoryTierBackend(StorageBackend):
                     self._wb_errors.append((k, err))
                 self._inflight.pop(k, None)
 
+    def protect(self, keys) -> None:
+        with self._lock:
+            shrank = not self._protected <= frozenset(keys)
+            self._protected = frozenset(keys)
+        if shrank:
+            # blobs just un-protected (a new full superseded their
+            # chain) become eviction candidates immediately
+            self._evict()
+
     def _evict(self):
         if self.capacity_bytes is None:
             return
@@ -200,7 +268,16 @@ class MemoryTierBackend(StorageBackend):
             with self._lock:
                 if self._bytes <= self.capacity_bytes or len(self._mem) <= 1:
                     return
-                key = next(iter(self._mem))
+                # FIFO over the *evictable* keys only: a blob in the
+                # newest full's chain stays resident even over capacity
+                # (soft cap) — evicting it would push latest-chain
+                # recovery down to the slow tier, or lose it outright
+                # if the write-back later failed
+                key = next((k for k in self._mem
+                            if k not in self._protected), None)
+                if key is None:
+                    self.evictions_skipped += 1
+                    return
             fut = self._inflight.pop(key, None)
             if fut is not None:
                 fut.result()  # never drop RAM before the spill lands
@@ -284,6 +361,8 @@ class MemoryTierBackend(StorageBackend):
             nbytes = self._bytes
         return {"backend": self.name, "resident_blobs": resident,
                 "resident_bytes": nbytes, "evictions": self.evictions,
+                "evictions_skipped": self.evictions_skipped,
+                "protected": len(self._protected),
                 "spills": self.spills,
                 "writeback_errors": len(self._wb_errors),
                 "lower": self.lower.stats() if self.lower else None}
@@ -338,8 +417,8 @@ class ShardedBackend(StorageBackend):
     Layout::
 
         <root>/<key>.meta.json            # struct + placement (commit point)
-        <root>/shard_000/<key>.npz        # host 0's leaf pieces
-        <root>/shard_001/<key>.npz        # ...
+        <root>/shard_000/<key>.ckpt       # host 0's leaf pieces (frame;
+        <root>/shard_001/<key>.ckpt       # .npz with fmt="npz") ...
 
     ``put`` packs the pytree (``repro.checkpoint.io.pack``), splits each
     large array along ``split_axis_fn(arr)`` into ``num_shards`` pieces
@@ -352,18 +431,23 @@ class ShardedBackend(StorageBackend):
 
     name = "sharded"
     META_SUFFIX = ".meta.json"
+    SHARD_SUFFIXES = {"frame": ".ckpt", "npz": ".npz"}
 
     def __init__(self, root: str, num_shards: int = 4, *,
                  split_threshold_bytes: int = 1 << 16,
                  split_axis_fn=default_split_axis,
-                 max_workers: Optional[int] = None):
+                 max_workers: Optional[int] = None, fmt: str = "frame"):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
+        if fmt not in self.SHARD_SUFFIXES:
+            raise ValueError(f"fmt must be one of "
+                             f"{tuple(self.SHARD_SUFFIXES)}")
         self.root = root
         self.persist_root = root
         self.num_shards = num_shards
         self.split_threshold_bytes = split_threshold_bytes
         self.split_axis_fn = split_axis_fn
+        self.fmt = fmt
         os.makedirs(root, exist_ok=True)
         for k in range(num_shards):
             os.makedirs(self._shard_dir(k), exist_ok=True)
@@ -375,8 +459,40 @@ class ShardedBackend(StorageBackend):
     def _shard_dir(self, k: int) -> str:
         return os.path.join(self.root, f"shard_{k:03d}")
 
-    def _shard_path(self, k: int, key: str) -> str:
-        return os.path.join(self._shard_dir(k), f"{key}.npz")
+    def _shard_path(self, k: int, key: str,
+                    fmt: Optional[str] = None) -> str:
+        return os.path.join(self._shard_dir(k),
+                            f"{key}{self.SHARD_SUFFIXES[fmt or self.fmt]}")
+
+    def _find_shard(self, k: int, key: str) -> str:
+        for fmt in sorted(self.SHARD_SUFFIXES, key=lambda f: f != self.fmt):
+            p = self._shard_path(k, key, fmt)
+            if os.path.exists(p):
+                return p
+        raise FileNotFoundError(
+            f"no shard file for {key!r} in {self._shard_dir(k)}")
+
+    def _save_shard(self, k: int, key: str,
+                    payload: Dict[str, np.ndarray]) -> int:
+        if self.fmt == "frame":
+            # streamed: each leaf piece goes straight into the shard
+            # file via memoryview — no intermediate npz/zip blob
+            n = cio.save_frame_payload(self._shard_path(k, key), payload)
+        else:
+            n = cio.save_npz(self._shard_path(k, key), payload)
+        for fmt in self.SHARD_SUFFIXES:   # drop a stale cross-format file
+            if fmt != self.fmt:
+                try:
+                    os.unlink(self._shard_path(k, key, fmt))
+                except FileNotFoundError:
+                    pass
+        return n
+
+    def _load_shard(self, k: int, key: str) -> Dict[str, np.ndarray]:
+        path = self._find_shard(k, key)
+        if cio.is_frame_file(path):
+            return cio.read_frame(path)[1]
+        return cio.load_npz(path)
 
     def _meta_path(self, key: str) -> str:
         return os.path.join(self.root, f"{key}{self.META_SUFFIX}")
@@ -406,12 +522,12 @@ class ShardedBackend(StorageBackend):
                 loads[k] += max(arr.nbytes, 1)
                 placements.append({"kind": "whole", "shard": k})
         used = [k for k in range(self.num_shards) if payloads[k]]
-        futs = {k: self._pool.submit(cio.save_npz, self._shard_path(k, key),
-                                     payloads[k])
+        futs = {k: self._pool.submit(self._save_shard, k, key, payloads[k])
                 for k in used}
         nbytes = sum(f.result() for f in futs.values())
         meta = {"struct": struct, "placements": placements, "shards": used,
-                "num_shards": self.num_shards, "nbytes": nbytes}
+                "num_shards": self.num_shards, "nbytes": nbytes,
+                "format": self.fmt}
         meta_bytes = cio.atomic_write(
             self._meta_path(key),
             lambda f: f.write(json.dumps(meta).encode("utf-8")))
@@ -423,7 +539,7 @@ class ShardedBackend(StorageBackend):
                 meta = json.load(f)
         except FileNotFoundError:
             raise FileNotFoundError(f"no sharded blob {key!r} in {self.root}")
-        futs = {k: self._pool.submit(cio.load_npz, self._shard_path(k, key))
+        futs = {k: self._pool.submit(self._load_shard, k, key)
                 for k in meta["shards"]}
         shard_data = {k: f.result() for k, f in futs.items()}
         arrays: List[np.ndarray] = []
@@ -443,14 +559,16 @@ class ShardedBackend(StorageBackend):
         except FileNotFoundError:
             pass
         # scan the shard dirs present on disk, not range(num_shards): the
-        # blob may have been written under a different shard count
+        # blob may have been written under a different shard count (or a
+        # different format)
         for d in os.listdir(self.root):
             if not d.startswith("shard_"):
                 continue
-            try:
-                os.unlink(os.path.join(self.root, d, f"{key}.npz"))
-            except FileNotFoundError:
-                pass
+            for suffix in self.SHARD_SUFFIXES.values():
+                try:
+                    os.unlink(os.path.join(self.root, d, f"{key}{suffix}"))
+                except FileNotFoundError:
+                    pass
 
     def exists(self, key: str) -> bool:
         return os.path.exists(self._meta_path(key))
@@ -483,26 +601,29 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
                  memory_spill: bool = True,
                  remote_url: Optional[str] = None,
                  chunk_mb: float = 4.0, max_retries: int = 4,
-                 remote_fault_rate: float = 0.0) -> StorageBackend:
+                 remote_fault_rate: float = 0.0,
+                 fmt: str = "frame") -> StorageBackend:
     """Build a backend by name. ``memory`` layers the RAM tier over a
     LocalFS lower tier at ``root`` (pure-RAM when root is None or
     memory_spill is False). ``remote`` layers the RAM tier over a
     :class:`~repro.checkpoint.remote.RemoteObjectBackend` — the async
     write-back absorbs object-store latency, so the training loop never
-    blocks on the remote tier."""
+    blocks on the remote tier. ``fmt`` selects the write serialization:
+    ``"frame"`` (streamed zero-copy, the default) or ``"npz"`` (seed
+    format); reads always sniff, so either can open old checkpoints."""
     if name == "local":
         if root is None:
             raise ValueError("local backend requires a root directory")
-        return LocalFSBackend(root)
+        return LocalFSBackend(root, fmt=fmt)
     if name == "memory":
-        lower = (LocalFSBackend(root)
+        lower = (LocalFSBackend(root, fmt=fmt)
                  if root is not None and memory_spill else None)
         cap = int(capacity_mb * 2**20) if capacity_mb else None
         return MemoryTierBackend(lower, capacity_bytes=cap)
     if name == "sharded":
         if root is None:
             raise ValueError("sharded backend requires a root directory")
-        return ShardedBackend(root, num_shards=shards)
+        return ShardedBackend(root, num_shards=shards, fmt=fmt)
     if name == "remote":
         # function-level import: remote.py subclasses StorageBackend, so
         # importing it at module scope here would be circular
@@ -516,7 +637,7 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
             url = f"file://{root}"
         lower = make_remote_backend(
             url, chunk_bytes=int(chunk_mb * 2**20), max_retries=max_retries,
-            journal_root=root, fault_rate=remote_fault_rate)
+            journal_root=root, fault_rate=remote_fault_rate, fmt=fmt)
         cap = int(capacity_mb * 2**20) if capacity_mb else None
         return MemoryTierBackend(lower, capacity_bytes=cap)
     raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")

@@ -1,25 +1,53 @@
-"""Atomic pytree checkpoint storage on a filesystem.
+"""Atomic pytree checkpoint serialization: streamed frames + legacy npz.
 
-A checkpoint is one ``.npz`` (uncompressed zip of raw .npy buffers — the
-write cost is the tensor bytes, which is what the paper's model meters)
-plus an embedded JSON structure descriptor. Writes go to a temp file and
-``os.replace`` in, so readers never observe a torn checkpoint. Supports
-arbitrary nesting of dict / list / tuple / NamedTuple / SparseGrad /
-QuantGrad / jax arrays / numpy / python scalars.
+Two on-disk encodings share one pytree codec (:func:`pack` /
+:func:`unpack`):
+
+* **Frame** (the fast path) — a streamed zero-copy format::
+
+      RFRAME01 | header_len u64le | JSON header | pad -> 64B | leaf buffers
+
+  The JSON header carries the structure descriptor plus one record per
+  leaf: byte ``offset`` (relative to the 64-byte-aligned data section),
+  ``nbytes``, ``dtype``, ``shape`` and ``sha256``. Every leaf buffer is
+  64-byte aligned. Writers stream leaf-by-leaf via ``memoryview`` —
+  there is never an intermediate serialized blob — and readers map the
+  file with ``np.memmap`` so recovery touches only the leaves it needs.
+
+* **npz** (the seed format) — an uncompressed zip of raw ``.npy``
+  buffers with an embedded JSON structure descriptor. Kept fully
+  readable (and writable via ``fmt="npz"``) so old checkpoints and
+  mixed-format chains keep recovering; :func:`load_any` /
+  :func:`loads_any` sniff the magic bytes.
+
+Writes go through :func:`atomic_write` (temp file + fsync + rename +
+parent-directory fsync), so readers never observe a torn checkpoint and
+a crash immediately after the rename cannot lose it. Supports arbitrary
+nesting of dict / list / tuple / NamedTuple / SparseGrad / QuantGrad /
+PackedDiff / jax arrays / numpy / python scalars.
 """
 from __future__ import annotations
 
+import hashlib
 import io as _io
 import json
 import os
+import struct as _struct
 import tempfile
-from typing import Any, Dict, List, Tuple
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import jax
+import ml_dtypes
 import numpy as np
 
+from repro.compression.packed import PackedDiff
 from repro.compression.quant import QuantGrad
 from repro.compression.sparse import SparseGrad
+
+FRAME_MAGIC = b"RFRAME01"
+FRAME_ALIGN = 64
+FORMATS = ("frame", "npz")
 
 _NAMEDTUPLES: Dict[str, type] = {}
 
@@ -41,6 +69,42 @@ def _register_builtin():
 _register_builtin()
 
 
+class FrameCorruptionError(ValueError):
+    """A frame failed structural validation or a leaf sha256 check."""
+
+
+class CopyMeter:
+    """Process-wide counter of host-side copies of tensor bytes.
+
+    Instrumented at the points the zero-copy work eliminates: the D2H
+    snapshot (the one unavoidable copy), npz blob materialization
+    (``dumps``) and the remote tier's chunk re-slicing of that blob.
+    ``benchmarks/serialization.py`` reads it to report copies-per-
+    checkpoint for the npz vs frame paths."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.bytes = 0
+        self.events = 0
+
+    def add(self, nbytes: int) -> None:
+        with self._lock:
+            self.bytes += int(nbytes)
+            self.events += 1
+
+    def reset(self) -> None:
+        with self._lock:
+            self.bytes = 0
+            self.events = 0
+
+
+COPY_METER = CopyMeter()
+
+
+# ----------------------------------------------------------------------
+# pytree <-> (struct, arrays) codec
+# ----------------------------------------------------------------------
+
 def _pack(obj, arrays: List[np.ndarray]):
     """Recursively encode obj into JSON-able structure + array list."""
     if isinstance(obj, SparseGrad):
@@ -50,6 +114,16 @@ def _pack(obj, arrays: List[np.ndarray]):
     if isinstance(obj, QuantGrad):
         return {"__t": "quant", "shape": list(obj.shape), "block": obj.block,
                 "q": _arr(obj.q, arrays), "scale": _arr(obj.scale, arrays)}
+    if isinstance(obj, PackedDiff):
+        # block-local indices (< block <= 32768) narrow losslessly to
+        # int16 on the wire — this is what makes the nbytes accounting
+        # (1 + 2 bytes per selected element + scales) real on disk
+        idx = np.asarray(obj.indices)
+        if obj.block <= np.iinfo(np.int16).max + 1:
+            idx = idx.astype(np.int16)
+        return {"__t": "packed", "shape": list(obj.shape), "block": obj.block,
+                "q": _arr(obj.q, arrays), "indices": _arr(idx, arrays),
+                "scale": _arr(obj.scale, arrays)}
     if isinstance(obj, dict):
         return {"__t": "dict",
                 "items": {k: _pack(v, arrays) for k, v in obj.items()}}
@@ -85,6 +159,13 @@ def _unpack(node, arrays):
     if t == "quant":
         return QuantGrad(_get(node["q"], arrays), _get(node["scale"], arrays),
                          tuple(node["shape"]), node["block"])
+    if t == "packed":
+        # widen wire int16 indices back to the kernels' int32
+        return PackedDiff(_get(node["q"], arrays),
+                          np.asarray(_get(node["indices"], arrays),
+                                     np.int32),
+                          _get(node["scale"], arrays),
+                          tuple(node["shape"]), node["block"])
     if t == "dict":
         return {k: _unpack(v, arrays) for k, v in node["items"].items()}
     if t == "nt":
@@ -102,7 +183,6 @@ def _unpack(node, arrays):
 
 
 def _get(i: int, arrays):
-    import ml_dtypes
     if i < 0:
         return arrays[f"a{-i - 1}"].view(ml_dtypes.bfloat16)
     return arrays[f"a{i}"]
@@ -128,15 +208,36 @@ def unpack(struct: dict, arrays) -> Any:
     return _unpack(struct, arrays)
 
 
+# ----------------------------------------------------------------------
+# atomic file writes
+# ----------------------------------------------------------------------
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a just-renamed entry survives a crash.
+    Platforms whose directory handles reject fsync are skipped."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def atomic_write(path: str, write_fn) -> int:
     """Crash-safe file write: mkstemp in the target directory,
-    ``write_fn(binary_file)``, flush+fsync, then ``os.replace`` — a
-    reader never observes a torn file. The single implementation of the
-    pattern; every backend's durable write goes through it. Returns
-    bytes written."""
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                               suffix=".tmp")
+    ``write_fn(binary_file)``, flush+fsync, ``os.replace``, then fsync
+    the parent directory (the rename itself is only durable once the
+    directory entry is) — a reader never observes a torn file and a
+    crash immediately after cannot un-publish it. The single
+    implementation of the pattern; every backend's durable write goes
+    through it. Returns bytes written."""
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=parent, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
             write_fn(f)
@@ -147,8 +248,13 @@ def atomic_write(path: str, write_fn) -> int:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    _fsync_dir(parent)
     return os.path.getsize(path)
 
+
+# ----------------------------------------------------------------------
+# legacy npz encoding
+# ----------------------------------------------------------------------
 
 def save_npz(path: str, payload: Dict[str, np.ndarray]) -> int:
     """Atomic + fsync'd raw npz write. Returns bytes written."""
@@ -162,9 +268,9 @@ def load_npz(path: str) -> Dict[str, np.ndarray]:
 
 
 def payload_of(obj: Any) -> Dict[str, np.ndarray]:
-    """Encode obj as the canonical npz payload dict (``a0..aN`` +
-    embedded ``__struct__``). Single source of truth for the on-wire /
-    on-disk encoding — every backend writes exactly this."""
+    """Encode obj as the canonical payload dict (``a0..aN`` +
+    embedded ``__struct__``). Single source of truth for the npz
+    encoding — every npz writer emits exactly this."""
     struct, arrays = pack(obj)
     payload = {f"a{i}": a for i, a in enumerate(arrays)}
     payload["__struct__"] = np.frombuffer(
@@ -173,11 +279,14 @@ def payload_of(obj: Any) -> Dict[str, np.ndarray]:
 
 
 def dumps(obj: Any) -> bytes:
-    """Serialize obj to npz bytes (the same encoding :func:`save` puts
-    on disk) — for backends that ship byte blobs instead of files."""
+    """Serialize obj to npz bytes — for byte-blob backends on the
+    legacy path. Materializes the full blob in memory (the copy the
+    frame path exists to avoid), so it reports to the copy meter."""
     buf = _io.BytesIO()
     np.savez(buf, **payload_of(obj))
-    return buf.getvalue()
+    data = buf.getvalue()
+    COPY_METER.add(len(data))
+    return data
 
 
 def loads(data: bytes) -> Any:
@@ -188,11 +297,248 @@ def loads(data: bytes) -> Any:
 
 
 def save(path: str, obj: Any) -> int:
-    """Atomic write. Returns bytes written."""
+    """Atomic npz write (legacy format). Returns bytes written."""
     return save_npz(path, payload_of(obj))
 
 
 def load(path: str) -> Any:
+    """Load a checkpoint file of either format (magic-sniffed)."""
+    return load_any(path)
+
+
+# ----------------------------------------------------------------------
+# streamed frame format
+# ----------------------------------------------------------------------
+
+def _byte_view(a: np.ndarray) -> np.ndarray:
+    """Flat uint8 view of a C-contiguous array (zero-copy)."""
+    flat = a.reshape(-1) if a.ndim != 1 else a
+    if flat.size == 0:
+        return np.empty(0, np.uint8)
+    return flat.view(np.uint8)
+
+
+def frame_payload(obj: Any) -> Tuple[Dict[str, np.ndarray], dict]:
+    struct, arrays = pack(obj)
+    payload = {f"a{i}": a for i, a in enumerate(arrays)}
+    return payload, {"struct": struct}
+
+
+def _frame_plan(payload: Dict[str, np.ndarray],
+                extra: Optional[dict]) -> Tuple[bytes, List[np.ndarray],
+                                                List[int], int]:
+    """Lay the frame out: returns (prefix_bytes, contiguous arrays,
+    per-leaf pad-before sizes, total frame bytes). Leaf offsets in the
+    header are relative to the 64-byte-aligned data section, so the
+    header's own size never perturbs them."""
+    names = list(payload)
+    # NB: ascontiguousarray only when needed — it would promote 0-d
+    # scalars to shape (1,), breaking bit-identical npz parity
+    arrays = [a if a.flags.c_contiguous else np.ascontiguousarray(a)
+              for a in (np.asarray(payload[n]) for n in names)]
+    leaves, pads, rel = [], [], 0
+    for name, a in zip(names, arrays):
+        pad = (-rel) % FRAME_ALIGN
+        rel += pad
+        pads.append(pad)
+        view = _byte_view(a)
+        leaves.append({"name": name, "offset": rel, "nbytes": int(a.nbytes),
+                       "dtype": a.dtype.str, "shape": list(a.shape),
+                       "sha256": hashlib.sha256(view).hexdigest()})
+        rel += a.nbytes
+    header = {"version": 1, "leaves": leaves, "data_bytes": rel}
+    if extra:
+        header.update(extra)
+    hjson = json.dumps(header).encode("utf-8")
+    pre = len(FRAME_MAGIC) + 8 + len(hjson)
+    hpad = (-pre) % FRAME_ALIGN
+    prefix = (FRAME_MAGIC + _struct.pack("<Q", len(hjson)) + hjson
+              + b"\0" * hpad)
+    return prefix, arrays, pads, len(prefix) + rel
+
+
+def frame_segments(payload: Dict[str, np.ndarray],
+                   extra: Optional[dict] = None
+                   ) -> Tuple[int, Iterator[Any]]:
+    """(total_bytes, iterator of buffers) for a frame. Large leaf
+    buffers are yielded as zero-copy uint8 views; only the header and
+    the <=63-byte alignment pads are freshly allocated bytes."""
+    prefix, arrays, pads, total = _frame_plan(payload, extra)
+
+    def gen():
+        yield prefix
+        for pad, a in zip(pads, arrays):
+            if pad:
+                yield b"\0" * pad
+            if a.nbytes:
+                yield _byte_view(a)
+
+    return total, gen()
+
+
+def write_frame(f, payload: Dict[str, np.ndarray],
+                extra: Optional[dict] = None) -> int:
+    """Stream a frame into a binary file object, leaf by leaf — no
+    intermediate serialized blob. Returns bytes written."""
+    total, segs = frame_segments(payload, extra)
+    for seg in segs:
+        f.write(seg)
+    return total
+
+
+#: ceiling on the coalesce threshold: segments at or below it are packed
+#: together into shared chunks (a bounded copy of small glue + small
+#: leaves), segments above it stream as zero-copy view slices — copying
+#: a header is noise, re-slicing a 100MB leaf is the copy we exist to
+#: avoid
+_COALESCE_MAX = 1 << 18
+
+
+def frame_chunks(payload: Dict[str, np.ndarray], chunk_bytes: int,
+                 extra: Optional[dict] = None) -> Iterator[Any]:
+    """Yield the frame as a sequence of buffers each <= ``chunk_bytes``,
+    for backends that upload chunk objects. Large leaf buffers are
+    yielded as zero-copy views sliced at chunk boundaries; small
+    segments (header, pads, sub-256KB leaves) are coalesced into shared
+    chunks so a pytree of many small leaves does not explode the object
+    count. Coalesced *tensor* bytes report to the copy meter — they are
+    the only host copy the frame path ever makes, bounded by the
+    coalesce threshold per leaf."""
+    coalesce = min(_COALESCE_MAX, chunk_bytes)
+    _, segs = frame_segments(payload, extra)
+    pending = bytearray()
+    for seg in segs:
+        is_leaf = isinstance(seg, np.ndarray)
+        n = seg.nbytes if is_leaf else len(seg)
+        if n <= coalesce:
+            if pending and len(pending) + n > chunk_bytes:
+                yield bytes(pending)
+                pending = bytearray()
+            pending += bytes(seg)
+            if is_leaf:
+                COPY_METER.add(n)
+            continue
+        if pending:
+            yield bytes(pending)
+            pending = bytearray()
+        view = seg if is_leaf else memoryview(seg)
+        for o in range(0, n, chunk_bytes):
+            yield view[o:o + chunk_bytes]
+    if pending:
+        yield bytes(pending)
+
+
+def save_frame_payload(path: str, payload: Dict[str, np.ndarray],
+                       extra: Optional[dict] = None) -> int:
+    """Atomic streamed frame write of a named-array payload."""
+    return atomic_write(path, lambda f: write_frame(f, payload, extra))
+
+
+def save_frame(path: str, obj: Any) -> int:
+    """Atomic streamed frame write of a pytree. Returns bytes written."""
+    payload, extra = frame_payload(obj)
+    return save_frame_payload(path, payload, extra)
+
+
+def frame_dumps(obj: Any) -> bytes:
+    """Frame bytes in memory (tests / byte-blob transports)."""
+    payload, extra = frame_payload(obj)
+    total, segs = frame_segments(payload, extra)
+    out = bytearray(total)
+    pos = 0
+    for seg in segs:
+        b = memoryview(seg).cast("B") if isinstance(seg, np.ndarray) \
+            else memoryview(seg)
+        out[pos:pos + len(b)] = b
+        pos += len(b)
+    return bytes(out)
+
+
+def _parse_frame(buf: np.ndarray, *, verify: bool,
+                 source: str) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """buf: flat uint8 array (np.memmap or np.frombuffer) of the whole
+    frame. Returns (header, name -> zero-copy leaf view)."""
+    magic_len = len(FRAME_MAGIC)
+    if buf.nbytes < magic_len + 8 or bytes(buf[:magic_len]) != FRAME_MAGIC:
+        raise FrameCorruptionError(f"{source}: not a frame (bad magic)")
+    (hlen,) = _struct.unpack("<Q", bytes(buf[magic_len:magic_len + 8]))
+    pre = magic_len + 8 + hlen
+    if pre > buf.nbytes:
+        raise FrameCorruptionError(f"{source}: truncated header")
+    try:
+        header = json.loads(bytes(buf[magic_len + 8:pre]).decode("utf-8"))
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise FrameCorruptionError(f"{source}: header parse failed") from e
+    data_start = pre + (-pre) % FRAME_ALIGN
+    if data_start + header.get("data_bytes", 0) > buf.nbytes:
+        raise FrameCorruptionError(f"{source}: truncated data section")
+    out: Dict[str, np.ndarray] = {}
+    for leaf in header["leaves"]:
+        off = data_start + leaf["offset"]
+        raw = buf[off:off + leaf["nbytes"]]
+        if verify:
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != leaf["sha256"]:
+                raise FrameCorruptionError(
+                    f"{source}: leaf {leaf['name']!r} sha256 mismatch "
+                    f"({digest[:12]} != {leaf['sha256'][:12]})")
+        out[leaf["name"]] = raw.view(np.dtype(leaf["dtype"])).reshape(
+            tuple(leaf["shape"]))
+    return header, out
+
+
+def read_frame(path: str, *, mmap: bool = True,
+               verify: bool = False) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Read a frame file. With ``mmap`` (default) the leaves are lazy
+    ``np.memmap``-backed views — a reader that replays only part of a
+    chain never faults in the rest. ``verify`` recomputes each leaf's
+    sha256 (full read) and raises :class:`FrameCorruptionError` on
+    mismatch."""
+    if mmap:
+        buf = np.memmap(path, dtype=np.uint8, mode="r")
+    else:
+        with open(path, "rb") as f:
+            buf = np.frombuffer(f.read(), dtype=np.uint8)
+    return _parse_frame(buf, verify=verify, source=path)
+
+
+def load_frame(path: str, *, mmap: bool = True, verify: bool = False) -> Any:
+    """Load a pytree frame written by :func:`save_frame`."""
+    header, leaves = read_frame(path, mmap=mmap, verify=verify)
+    return unpack(header["struct"], leaves)
+
+
+def frame_loads(data: bytes, *, verify: bool = False) -> Any:
+    """Inverse of :func:`frame_dumps`."""
+    buf = np.frombuffer(data, dtype=np.uint8)
+    header, leaves = _parse_frame(buf, verify=verify, source="<bytes>")
+    return unpack(header["struct"], leaves)
+
+
+# ----------------------------------------------------------------------
+# format sniffing
+# ----------------------------------------------------------------------
+
+def is_frame_bytes(data) -> bool:
+    return bytes(data[:len(FRAME_MAGIC)]) == FRAME_MAGIC
+
+
+def is_frame_file(path: str) -> bool:
+    with open(path, "rb") as f:
+        return f.read(len(FRAME_MAGIC)) == FRAME_MAGIC
+
+
+def load_any(path: str, *, mmap: bool = True, verify: bool = False) -> Any:
+    """Load a checkpoint of either format, sniffing the magic bytes."""
+    if is_frame_file(path):
+        return load_frame(path, mmap=mmap, verify=verify)
     with np.load(path) as z:
         struct = json.loads(bytes(z["__struct__"]).decode())
         return _unpack(struct, z)
+
+
+def loads_any(data: bytes, *, verify: bool = False) -> Any:
+    """Deserialize a checkpoint byte blob of either format."""
+    if is_frame_bytes(data):
+        return frame_loads(data, verify=verify)
+    return loads(bytes(data))

@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import json
 import os
-import tempfile
 from typing import Dict, List, Optional
+
+from repro.checkpoint import io as cio
 
 EMPTY = {"fulls": [], "diffs": [], "batches": []}
 
@@ -138,17 +139,11 @@ class ManifestJournal:
         """Fold the log into an atomic snapshot and truncate it."""
         snap = dict(self.manifest)
         snap["__seq__"] = self._seq
-        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w", encoding="utf-8") as f:
-                json.dump(snap, f)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, self._snap_path())
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        # shared tmp+fsync+rename+dir-fsync implementation: the rename
+        # must be durable before the log is truncated, or a crash could
+        # lose both the snapshot and the folded records
+        cio.atomic_write(self._snap_path(),
+                         lambda f: f.write(json.dumps(snap).encode("utf-8")))
         # Snapshot is durable; a crash before the truncate just replays
         # records whose seq <= __seq__, which _load skips.
         self._log.close()
@@ -175,8 +170,9 @@ def _entry_key(e: dict) -> Optional[str]:
     key = e.get("key")
     if key is None and "path" in e:  # pre-journal entries carried paths only
         key = os.path.basename(e["path"])
-        if key.endswith(".npz"):
-            key = key[:-4]
+        for suffix in (".npz", ".ckpt"):
+            if key.endswith(suffix):
+                key = key[:-len(suffix)]
     return key
 
 

@@ -297,11 +297,14 @@ class RemoteObjectBackend(StorageBackend):
     def __init__(self, store: ObjectStore, *, chunk_bytes: int = 4 << 20,
                  max_retries: int = 4, backoff_s: float = 0.01,
                  backoff_max_s: float = 2.0,
-                 journal_root: Optional[str] = None):
+                 journal_root: Optional[str] = None, fmt: str = "frame"):
         if chunk_bytes < 1:
             raise ValueError("chunk_bytes must be >= 1")
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if fmt not in cio.FORMATS:
+            raise ValueError(f"fmt must be one of {cio.FORMATS}")
+        self.fmt = fmt
         self.store = store
         self.chunk_bytes = chunk_bytes
         self.max_retries = max_retries
@@ -351,22 +354,35 @@ class RemoteObjectBackend(StorageBackend):
         return f"{key}/{self.INDEX}"
 
     # ------------------------------------------------------------------
+    def _chunk_iter(self, obj: Any):
+        """Iterator of wire chunks (each <= chunk_bytes). The frame path
+        streams zero-copy views straight out of the snapshot buffers;
+        the npz path materializes the blob and re-slices it (two full
+        host copies, metered)."""
+        if self.fmt == "frame":
+            payload, extra = cio.frame_payload(obj)
+            return cio.frame_chunks(payload, self.chunk_bytes, extra)
+        blob = cio.dumps(obj)          # copy 1 (metered inside dumps)
+        cio.COPY_METER.add(len(blob))  # copy 2: the chunk re-slice below
+        return (blob[o:o + self.chunk_bytes]
+                for o in range(0, len(blob), self.chunk_bytes))
+
     def put(self, key: str, obj: Any) -> int:
-        blob = cio.dumps(obj)
-        chunks = [blob[o:o + self.chunk_bytes]
-                  for o in range(0, len(blob), self.chunk_bytes)] or [b""]
         # chunks carry a per-put generation prefix so a re-put never
         # overwrites the chunks the live index points at: until the new
         # index commits, the old version stays fully readable
         gen = os.urandom(4).hex()
-        index = {"nbytes": len(blob), "gen": gen, "chunks": []}
-        for i, chunk in enumerate(chunks):
+        index = {"gen": gen, "format": self.fmt, "chunks": []}
+        nbytes = 0
+        for i, chunk in enumerate(self._chunk_iter(obj)):
             name = self._chunk_name(key, gen, i)
             self._with_retries(
                 lambda n=name, c=chunk: self.store.put_object(n, c),
                 f"put {name}")
             index["chunks"].append({"name": name, "sha256": _sha256(chunk),
                                     "size": len(chunk)})
+            nbytes += len(chunk)
+        index["nbytes"] = nbytes
         # the index is the commit point: a crash before this line leaves
         # no index (or the previous one), exists()/get() keep answering
         # for the last committed version, and the chain store's
@@ -376,7 +392,7 @@ class RemoteObjectBackend(StorageBackend):
             lambda: self.store.put_object(self._index_name(key), index_bytes),
             f"put {self._index_name(key)}")
         self._count("puts")
-        self._count("bytes_up", len(blob) + len(index_bytes))
+        self._count("bytes_up", nbytes + len(index_bytes))
         with self._lock:
             prev = self._live_gens.get(key)
             self._live_gens[key] = gen
@@ -385,7 +401,7 @@ class RemoteObjectBackend(StorageBackend):
             # (every step-named key, i.e. nearly all of them) skip the
             # listing entirely
             self._sweep_stale(key, gen)
-        return len(blob)
+        return nbytes
 
     def _sweep_stale(self, key: str, live_gen: str) -> None:
         """Best-effort GC of chunks from superseded generations (and
@@ -427,7 +443,9 @@ class RemoteObjectBackend(StorageBackend):
         blob = b"".join(self._fetch_chunk(e) for e in index["chunks"])
         self._count("gets")
         self._count("bytes_down", len(blob))
-        return cio.loads(blob)
+        # magic-sniffed: old npz uploads and new frame uploads both load
+        # (chunk sha256s already verified each piece in _fetch_chunk)
+        return cio.loads_any(blob)
 
     def delete(self, key: str) -> None:
         # index first: a crash mid-delete leaves orphan chunks (harmless,
@@ -487,7 +505,8 @@ def make_remote_backend(url: str, *, chunk_bytes: int = 4 << 20,
                         max_retries: int = 4,
                         journal_root: Optional[str] = None,
                         fault_rate: float = 0.0,
-                        seed: int = 0) -> RemoteObjectBackend:
+                        seed: int = 0,
+                        fmt: str = "frame") -> RemoteObjectBackend:
     """Build a RemoteObjectBackend from a URL.
 
     * ``fake://<bucket>`` — in-process store, shared per bucket name
@@ -517,7 +536,7 @@ def make_remote_backend(url: str, *, chunk_bytes: int = 4 << 20,
                             if fault_rate > 0.0 else None)
         return RemoteObjectBackend(store, chunk_bytes=chunk_bytes,
                                    max_retries=max_retries,
-                                   journal_root=journal_root)
+                                   journal_root=journal_root, fmt=fmt)
     if scheme == "file":
         root = rest
         if not root:
@@ -525,7 +544,8 @@ def make_remote_backend(url: str, *, chunk_bytes: int = 4 << 20,
         store = FilesystemObjectStore(os.path.join(root, "objects"))
         return RemoteObjectBackend(
             store, chunk_bytes=chunk_bytes, max_retries=max_retries,
-            journal_root=journal_root if journal_root is not None else root)
+            journal_root=journal_root if journal_root is not None else root,
+            fmt=fmt)
     raise ValueError(
         f"unsupported remote scheme {scheme!r}: this build bundles "
         f"fake:// and file:// (implement ObjectStore for real buckets)")

@@ -50,6 +50,7 @@ class CheckpointStore:
         self.writes = 0
         self.gc_deleted = 0
         self._prune_missing()
+        self._update_protected()
 
     # ------------------------------------------------------------------
     @property
@@ -57,6 +58,10 @@ class CheckpointStore:
         return self.journal.manifest
 
     def _record(self, kind: str, entry: dict, nbytes: int):
+        # tag each entry with the serialization format the backend wrote
+        # (frame / npz) — mixed-format chains stay self-describing in
+        # the journal even though readers also sniff the magic bytes
+        entry.setdefault("format", getattr(self.backend, "fmt", "npz"))
         with self._lock:
             self.journal.append("add", kind, entry=entry)
             self.bytes_written += nbytes
@@ -65,30 +70,68 @@ class CheckpointStore:
     # ------------------------------------------------------------------
     def save_full(self, step: int, state) -> str:
         key = f"full_{step:08d}"
+        # pre-protect: eviction runs inside put(), before the journal
+        # records the entry — the incoming blob must already be exempt
+        self._update_protected(extra={key})
         n = self.backend.put(key, state)
         self._record("fulls", {"step": step, "key": key,
                                "path": self.backend.url(key), "bytes": n}, n)
+        self._update_protected()
         if self.retention_fulls:
             self.gc()
         return key
 
     def save_diff(self, step: int, payload) -> str:
         key = f"diff_{step:08d}"
+        self._update_protected(extra={key})
         n = self.backend.put(key, payload)
         self._record("diffs", {"step": step, "key": key,
                                "path": self.backend.url(key), "bytes": n}, n)
+        self._update_protected()
         return key
 
     def save_batch(self, first: int, last: int, payloads: list,
                    mode: str = "concat") -> str:
         """One I/O operation carrying differentials [first..last]."""
         key = f"batch_{first:08d}_{last:08d}"
+        self._update_protected(extra={key})
         n = self.backend.put(key, {"mode": mode, "first": first,
                                    "last": last, "payloads": payloads})
         self._record("batches", {"first": first, "last": last, "key": key,
                                  "path": self.backend.url(key),
                                  "bytes": n}, n)
+        self._update_protected()
         return key
+
+    # ------------------------------------------------------------------
+    def _update_protected(self, extra=()):
+        """Tell a capacity-bounded backend tier which blobs form the
+        newest full's replay chain (the full itself plus every
+        diff/batch after its step): chain-aware eviction must keep
+        those resident — they are exactly what recovery reads.
+        ``extra`` pre-protects a key whose put is about to run.
+
+        protect() is called while still holding the store lock:
+        computing the set and applying it must be atomic, or two
+        concurrent writers (the batch consumer and the full-persist
+        pool) could apply their sets out of order and un-protect the
+        newest chain."""
+        keys = set(extra)
+        with self._lock:
+            fulls = self.manifest["fulls"]
+            if not fulls and not keys:
+                return
+            if fulls:
+                newest = max(fulls, key=lambda e: e["step"])
+                cutoff = newest["step"]
+                keys.add(self._entry_key(newest))
+                keys.update(self._entry_key(e)
+                            for e in self.manifest["diffs"]
+                            if e["step"] > cutoff)
+                keys.update(self._entry_key(e)
+                            for e in self.manifest["batches"]
+                            if e["last"] > cutoff)
+            self.backend.protect(keys)
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -182,6 +225,7 @@ class CheckpointStore:
                 self.backend.delete(key)
                 removed[kind] += 1
                 self.gc_deleted += 1
+        self._update_protected()
         return removed
 
     # ------------------------------------------------------------------

@@ -16,13 +16,16 @@ def ef_init(params):
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
-def ef_compress_tree(grads, ef_state, rho: float):
-    """Returns (compressed tree, new ef state)."""
+def ef_compress_tree_with(grads, ef_state, compress_fn, decompress_fn):
+    """Generic EF loop for any biased (compress, decompress) pair:
+    compresses ``grad + residual`` per leaf and keeps the new residual
+    (which absorbs sparsification *and* quantization error alike).
+    Returns (compressed tree, new ef state)."""
     def one(g, e):
         corrected = g.astype(jnp.float32) + e
-        sg = topk_compress(corrected, rho)
-        residual = corrected - topk_decompress(sg).astype(jnp.float32)
-        return sg, residual
+        cg = compress_fn(corrected)
+        residual = corrected - decompress_fn(cg).astype(jnp.float32)
+        return cg, residual
 
     g_flat, treedef = jax.tree.flatten(grads)
     e_flat = treedef.flatten_up_to(ef_state)
@@ -30,3 +33,11 @@ def ef_compress_tree(grads, ef_state, rho: float):
     cg = jax.tree.unflatten(treedef, [p[0] for p in pairs])
     ef = jax.tree.unflatten(treedef, [p[1] for p in pairs])
     return cg, ef
+
+
+def ef_compress_tree(grads, ef_state, rho: float):
+    """Returns (compressed tree, new ef state) — top-k instance."""
+    return ef_compress_tree_with(
+        grads, ef_state,
+        lambda g: topk_compress(g, rho),
+        topk_decompress)

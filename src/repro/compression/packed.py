@@ -1,0 +1,48 @@
+"""Wire-format packed differential: fused top-k + int8 quantization.
+
+``PackedDiff`` is the container emitted by the fused Pallas
+compress-and-pack kernel (``repro.kernels.pack``): per 1024-element
+block, the top-k values quantized to int8 against a per-block absmax
+scale, plus the block-local indices. The three buffers (q / indices /
+scale) are each contiguous and exactly what the frame serializer puts
+on the wire — the differential comes off the device already in its
+persisted layout, so the write path never re-encodes it.
+
+Size per block: k int8 values + k int16-representable indices + one f32
+scale — ~4x smaller than the f32 ``SparseGrad`` values at the same rho.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+
+from repro.compression.sparse import BLOCK
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedDiff:
+    """Blockwise top-k selected, int8-quantized compressed tensor."""
+    q: jax.Array                 # (nb, k) int8 — quantized top-k values
+    indices: jax.Array           # (nb, k) int32, block-local
+    scale: jax.Array             # (nb, 1) f32 per-block dequant scale
+    shape: Tuple[int, ...]       # original dense shape
+    block: int = BLOCK
+
+    def tree_flatten(self):
+        return (self.q, self.indices, self.scale), (self.shape, self.block)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], children[2], aux[0], aux[1])
+
+    @property
+    def nbytes(self) -> int:
+        # indices fit in int16 on disk (block-local < 1024)
+        return int(self.q.size + self.indices.size * 2 + self.scale.size * 4)
+
+    def dense(self) -> jax.Array:
+        from repro.kernels.ops import packed_decompress
+        return packed_decompress(self)

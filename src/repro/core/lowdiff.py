@@ -24,7 +24,6 @@ from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
@@ -32,12 +31,8 @@ from repro.core import recovery as rec
 from repro.core.config_opt import OnlineTuner, SystemParams, practical_config
 from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
                                       wait_drained)
+from repro.core.snapshot import SnapshotArena, host_copy  # noqa: F401
 from repro.core.steps import make_train_step
-
-
-def host_copy(tree):
-    """The single D2H copy (snapshot). jax.Array -> np.ndarray leaves."""
-    return jax.tree.map(lambda x: np.asarray(x), tree)
 
 
 class LowDiff:
@@ -69,6 +64,10 @@ class LowDiff:
         self.full_interval = full_interval or fi
         self.batch_size = batch_size or bs
         self.queue = ReusingQueue(maxsize=queue_size)
+        # double-buffered D2H snapshot permits: the full-state snapshot
+        # overlaps the next training step; a persist tier more than two
+        # snapshots behind backpressures instead of hoarding host copies
+        self._arena = SnapshotArena(slots=2)
         self.step_fn = make_train_step(model, mode="lowdiff", rho=rho, lr=lr,
                                        error_feedback=error_feedback,
                                        compressor=compressor)
@@ -167,15 +166,21 @@ class LowDiff:
         self._start_consumer()
         self.queue.put(step, cg)          # zero-copy hand-off
         if step % self.full_interval == 0:
-            snap = host_copy(state)       # snapshot (sync, small cost)
+            # async snapshot: only enqueue the D2H transfers here — the
+            # wait for the bytes (and the write) happens on the persist
+            # thread, overlapped with the next training step
+            pending = self._arena.snapshot_async(state)
             self._pending.append(
-                self._persist_pool.submit(self._persist_full, step, snap))
+                self._persist_pool.submit(self._persist_full, step, pending))
             self.full_saves += 1
         self.ckpt_time += time.perf_counter() - t0
         return state, metrics
 
-    def _persist_full(self, step: int, snap):
-        self.store.save_full(step, snap)
+    def _persist_full(self, step: int, pending):
+        try:
+            self.store.save_full(step, pending.result())
+        finally:
+            pending.release()
 
     def flush(self, timeout: Optional[float] = None):
         """Block until every queued differential/full write is durable
@@ -230,6 +235,7 @@ class LowDiff:
 
     def stats(self) -> Dict[str, Any]:
         return {"queue": self.queue.stats(), "store": self.store.stats(),
+                "snapshot_arena": self._arena.stats(),
                 "full_interval": self.full_interval,
                 "batch_size": self.batch_size,
                 "tuning": {"auto": {"full_interval": self._auto_full_interval,

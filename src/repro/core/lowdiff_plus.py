@@ -31,9 +31,9 @@ import jax
 import numpy as np
 
 from repro.checkpoint.store import CheckpointStore
-from repro.core.lowdiff import host_copy
 from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
                                       wait_drained)
+from repro.core.snapshot import host_copy, start_host_transfer
 from repro.core.steps import make_train_step
 
 
@@ -146,7 +146,10 @@ class LowDiffPlus:
         step = self._step_counter   # host-side: never forces the device
         self._start_consumer()
         flat = _flatten(grads)
-        # layer-wise snapshot: one D2H copy per leaf, in parallel
+        # layer-wise snapshot: enqueue every leaf's non-blocking D2H
+        # transfer first (they all run concurrently with the next step),
+        # then let the pool materialize each leaf as its bytes land
+        start_host_transfer(flat)
         futures = {k: self._snap_pool.submit(np.asarray, v)
                    for k, v in flat.items()}
         self.queue.put(step, futures)

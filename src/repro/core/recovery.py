@@ -78,8 +78,9 @@ def contiguous_prefix(start: int, diffs: List[Tuple[int, Any]],
 
 
 def _is_compressed(x):
+    from repro.compression.packed import PackedDiff
     from repro.compression.quant import QuantGrad
-    return isinstance(x, (SparseGrad, QuantGrad))
+    return isinstance(x, (SparseGrad, QuantGrad, PackedDiff))
 
 
 def maybe_decompress(payload):

@@ -1,0 +1,137 @@
+"""Overlapped device-to-host snapshots (§V-B step ① without the stall).
+
+The seed's ``host_copy`` walked the pytree calling ``np.asarray`` leaf
+by leaf — each call blocks the caller until that leaf's D2H transfer
+finishes, serializing the transfers *and* charging them to the training
+loop. This module replaces it with the two-phase pattern:
+
+1. **start** — issue ``copy_to_host_async()`` on every jax leaf. This
+   only enqueues DMA descriptors; on TPU the transfers run out of a
+   pinned staging area while the next training step computes.
+2. **materialize** — ``np.asarray`` each leaf *later* (on the persist /
+   consumer thread), which merely waits for the already-running
+   transfers and hands back the landed host buffer. The D2H transfer is
+   the single host-side copy of the tensor bytes; the frame serializer
+   streams those same buffers to storage with no further copies.
+
+:class:`SnapshotArena` adds double-buffering semantics on top: at most
+``slots`` (default 2) snapshots may be in flight, so a slow persist
+tier exerts backpressure on the training loop instead of accumulating
+unbounded host copies of the model state — the JAX adaptation of a
+fixed pinned-arena design (the runtime owns the actual pinned staging
+memory; the arena owns the lifetime and the bound).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.io import COPY_METER
+
+
+def start_host_transfer(tree) -> Any:
+    """Phase 1: enqueue non-blocking D2H transfers for every jax leaf.
+    Returns the tree unchanged (transfers run in the background)."""
+    for leaf in jax.tree.leaves(tree):
+        if isinstance(leaf, jax.Array):
+            try:
+                leaf.copy_to_host_async()
+            except AttributeError:  # non-addressable / already on host
+                pass
+    return tree
+
+
+def materialize(tree):
+    """Phase 2: wait for the transfers and return a numpy-leaf tree.
+    Counts the D2H bytes as the one metered host copy."""
+    out = jax.tree.map(np.asarray, tree)
+    COPY_METER.add(sum(a.nbytes for a in jax.tree.leaves(out)
+                       if isinstance(a, np.ndarray)))
+    return out
+
+
+def host_copy(tree):
+    """Batched synchronous snapshot: start *all* transfers first, then
+    gather — the transfers overlap each other even though the caller
+    still blocks until the last one lands. Drop-in replacement for the
+    seed's per-leaf ``np.asarray`` walk."""
+    return materialize(start_host_transfer(tree))
+
+
+class PendingSnapshot:
+    """A snapshot whose D2H transfers have been issued but not awaited.
+
+    ``result()`` (any thread) materializes the host tree — the first
+    caller pays only the residual transfer wait, later callers get the
+    cached tree. ``release()`` frees the arena slot and drops the
+    buffer references; call it once the snapshot has been persisted.
+    """
+
+    def __init__(self, tree, arena: Optional["SnapshotArena"] = None):
+        self._tree = start_host_transfer(tree)
+        self._arena = arena
+        self._host: Any = None
+        self._done = False
+        self._lock = threading.Lock()
+
+    def result(self):
+        with self._lock:
+            if not self._done:
+                self._host = materialize(self._tree)
+                self._tree = None          # device refs no longer needed
+                self._done = True
+            return self._host
+
+    def release(self) -> None:
+        with self._lock:
+            self._tree = None
+            self._host = None
+            self._done = True
+        if self._arena is not None:
+            self._arena._release()
+            self._arena = None
+
+    def __enter__(self):
+        return self.result()
+
+    def __exit__(self, *exc):
+        self.release()
+
+
+class SnapshotArena:
+    """Double-buffered snapshot permits.
+
+    ``snapshot_async(tree)`` issues the async transfers and returns a
+    :class:`PendingSnapshot`; it blocks only when ``slots`` snapshots
+    are already in flight (persist tier behind by two full states) —
+    bounded memory, no unbounded queue of model copies.
+    """
+
+    def __init__(self, slots: int = 2):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.slots = slots
+        self._sem = threading.Semaphore(slots)
+        self._lock = threading.Lock()
+        self.snapshots = 0
+        self.stalls = 0
+
+    def snapshot_async(self, tree) -> PendingSnapshot:
+        if not self._sem.acquire(blocking=False):
+            with self._lock:
+                self.stalls += 1
+            self._sem.acquire()
+        with self._lock:
+            self.snapshots += 1
+        return PendingSnapshot(tree, arena=self)
+
+    def _release(self) -> None:
+        self._sem.release()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"slots": self.slots, "snapshots": self.snapshots,
+                    "stalls": self.stalls}

@@ -23,7 +23,8 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.compression.error_feedback import ef_compress_tree, ef_init
+from repro.compression.error_feedback import (ef_compress_tree,
+                                              ef_compress_tree_with, ef_init)
 from repro.compression.sparse import compress_tree, decompress_tree
 from repro.optim.adam import adam_init, adam_update
 
@@ -72,9 +73,11 @@ def make_train_step(model, *, mode: str = "lowdiff", rho: float = 0.01,
                     lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
                     eps: float = 1e-8, error_feedback: bool = True,
                     compressor: str = "topk", jit: bool = True):
-    """``compressor``: 'topk' (sparsification, paper default) or 'quant8'
-    (blockwise int8 — the paper's other §II-C compression family). Both
-    produce reusable differential checkpoints; EF applies to topk only."""
+    """``compressor``: 'topk' (sparsification, paper default), 'quant8'
+    (blockwise int8 — the paper's other §II-C compression family) or
+    'packed' (fused top-k + int8 quantize + wire pack — the differential
+    leaves the device already in frame layout). All produce reusable
+    differential checkpoints; EF applies to topk and packed."""
     cfg = model.cfg
     accum = cfg.grad_accum
 
@@ -97,11 +100,27 @@ def make_train_step(model, *, mode: str = "lowdiff", rho: float = 0.01,
                 return ({"params": params2, "opt": opt2,
                          "step": state["step"] + 1},
                         dict(metrics, loss=loss), extra)
-            if error_feedback and "ef" in state:
+            if compressor == "packed":
+                from repro.compression.packed import PackedDiff
+                from repro.kernels.ops import (packed_compress,
+                                               packed_decompress)
+                is_pd = lambda x: isinstance(x, PackedDiff)  # noqa: E731
+                if error_feedback and "ef" in state:
+                    cg, ef = ef_compress_tree_with(
+                        grads, state["ef"],
+                        lambda g: packed_compress(g, rho),
+                        packed_decompress)
+                else:
+                    cg = jax.tree.map(lambda g: packed_compress(g, rho),
+                                      grads)
+                    ef = None
+                g_upd = jax.tree.map(packed_decompress, cg, is_leaf=is_pd)
+            elif error_feedback and "ef" in state:
                 cg, ef = ef_compress_tree(grads, state["ef"], rho)
+                g_upd = decompress_tree(cg)
             else:
                 cg, ef = compress_tree(grads, rho), None
-            g_upd = decompress_tree(cg)
+                g_upd = decompress_tree(cg)
             extra = cg
         else:
             g_upd, ef = grads, None

@@ -14,8 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression.packed import PackedDiff
 from repro.compression.sparse import BLOCK, SparseGrad, _pad_len, k_for
 from repro.kernels import fused_adam as _fa
+from repro.kernels import pack as _pk
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
 from repro.kernels import topk as _tk
@@ -62,6 +64,39 @@ def topk_decompress(sg: SparseGrad, *, use_pallas: bool = True) -> jax.Array:
         dense = _ref.topk_scatter_ref(vals, idx, sg.block)
     n = int(np.prod(sg.shape)) if sg.shape else 1
     return dense[:nb].reshape(-1)[:n].reshape(sg.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "block", "use_pallas"))
+def packed_compress(x: jax.Array, rho: float, *, block: int = BLOCK,
+                    use_pallas: bool = True) -> PackedDiff:
+    """Fused compress-and-pack: one kernel pass emits the wire-format
+    (q int8, indices, scales) buffers — the differential comes off the
+    device already in the frame serializer's layout."""
+    xb, nb = _to_blocks(x, block)
+    k = k_for(rho, block)
+    if use_pallas:
+        q, idx, scale = _pk.pack_select(xb, k, interpret=_interpret())
+    else:
+        q, idx, scale = _ref.pack_select_ref(xb, k)
+    return PackedDiff(q[:nb], idx[:nb], scale[:nb], x.shape, block)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def packed_decompress(pd: PackedDiff, *, use_pallas: bool = True
+                      ) -> jax.Array:
+    """Inverse of packed_compress: fused dequant + scatter to dense."""
+    nb = pd.q.shape[0]
+    rpad = _pad_len(nb, _pk.ROWS)
+    q = jnp.pad(pd.q, ((0, rpad), (0, 0)))
+    idx = jnp.pad(pd.indices, ((0, rpad), (0, 0)))
+    scale = jnp.pad(pd.scale, ((0, rpad), (0, 0)))
+    if use_pallas:
+        dense = _pk.pack_scatter(q, idx, scale, pd.block,
+                                 interpret=_interpret())
+    else:
+        dense = _ref.pack_scatter_ref(q, idx, scale, pd.block)
+    n = int(np.prod(pd.shape)) if pd.shape else 1
+    return dense[:nb].reshape(-1)[:n].reshape(pd.shape)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "use_pallas"))

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: fused top-k select + int8 quantize + wire pack.
+
+The seed pipeline ran compression in two kernels (top-k select, then —
+only for the quant family — int8 quantization) and left packing to the
+host serializer. This kernel fuses all three for the differential fast
+path: one (R, BLOCK) VMEM tile per grid step is read **once**, the k
+iterative argmax passes run in registers exactly as in ``topk.py``, the
+selected values are immediately quantized against a per-row absmax
+scale, and the three wire buffers (q int8, block-local indices, f32
+scales) come out contiguous — the frame serializer streams them to
+storage byte-for-byte, so the differential leaves the device already in
+its persisted format. Still a single pass over the gradient: the fusion
+removes the second gradient read and the host-side re-encode, not just
+kernel-launch overhead.
+
+The max |value| of a block is by construction the first top-k pick, so
+the quantization scale needs no second reduction over the tile — it
+falls out of the selection loop for free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS = 8          # rows (blocks) per grid step — one f32 sublane tile
+
+
+def _pack_kernel(x_ref, q_ref, idx_ref, scale_ref, *, k: int, block: int):
+    x = x_ref[...]                                     # (R, BLOCK)
+    xf = x.astype(jnp.float32)
+    mag = jnp.abs(xf)
+    iota = jax.lax.broadcasted_iota(jnp.int32, mag.shape, 1)
+
+    def body(i, carry):
+        mag, vals, idxs = carry
+        m = jnp.max(mag, axis=1, keepdims=True)        # (R, 1)
+        hit = mag == m
+        idx = jnp.min(jnp.where(hit, iota, block), axis=1)      # (R,)
+        sel = iota == idx[:, None]
+        val = jnp.sum(jnp.where(sel, xf, 0.0), axis=1)          # (R,)
+        vals = jax.lax.dynamic_update_index_in_dim(vals, val, i, 1)
+        idxs = jax.lax.dynamic_update_index_in_dim(idxs, idx, i, 1)
+        mag = jnp.where(sel, -1.0, mag)
+        return mag, vals, idxs
+
+    vals0 = jnp.zeros((x.shape[0], k), jnp.float32)
+    idxs0 = jnp.zeros((x.shape[0], k), jnp.int32)
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, (mag, vals0, idxs0))
+    # the first selection is the absmax of the block — its magnitude is
+    # the quantization range, no extra reduction over the tile needed
+    scale = jnp.maximum(
+        jnp.abs(jax.lax.dynamic_index_in_dim(vals, 0, 1)) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(vals / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    idx_ref[...] = idxs
+    scale_ref[...] = scale
+
+
+def pack_select(xb: jax.Array, k: int, *, interpret: bool = False):
+    """xb: (nb, block) -> (q int8 (nb,k), indices int32 (nb,k),
+    scale f32 (nb,1)) — fused top-k + quantize + pack, one read of x."""
+    nb, block = xb.shape
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    kernel = functools.partial(_pack_kernel, k=k, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, k), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, k), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, k), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, k), jnp.int32),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+
+
+def _unpack_kernel(q_ref, idx_ref, scale_ref, out_ref, *, block: int):
+    vals = q_ref[...].astype(jnp.float32) * scale_ref[...]      # (R, k)
+    idxs = idx_ref[...]
+    R, k = vals.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (R, block), 1)
+
+    def body(i, acc):
+        sel = iota == jax.lax.dynamic_index_in_dim(idxs, i, 1)  # (R,1)->bcast
+        v = jax.lax.dynamic_index_in_dim(vals, i, 1)
+        return acc + jnp.where(sel, v, 0.0)
+
+    acc = jax.lax.fori_loop(0, k, body, jnp.zeros((R, block), jnp.float32))
+    out_ref[...] = acc
+
+
+def pack_scatter(q: jax.Array, idxs: jax.Array, scale: jax.Array,
+                 block: int, *, interpret: bool = False):
+    """Inverse of pack_select: fused dequant + block-local scatter to a
+    dense (nb, block) f32 tile — again a single kernel pass."""
+    nb, k = q.shape
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    kernel = functools.partial(_unpack_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, k), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, k), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q, idxs, scale)

@@ -6,8 +6,6 @@ design (single pass over the gradient).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

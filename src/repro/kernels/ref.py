@@ -19,6 +19,26 @@ def topk_scatter_ref(vals: jax.Array, idxs: jax.Array, block: int):
     return jax.vmap(lambda o, i, v: o.at[i].add(v))(out, idxs, vals)
 
 
+def pack_select_ref(xb: jax.Array, k: int):
+    """Fused compress-and-pack oracle: top-k by magnitude, then int8
+    quantization of the selected values against the per-row absmax."""
+    mag = jnp.abs(xb.astype(jnp.float32))
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(xb.astype(jnp.float32), idx, axis=1)
+    scale = jnp.maximum(jnp.max(jnp.abs(vals), axis=1, keepdims=True)
+                        / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(vals / scale), -127, 127).astype(jnp.int8)
+    return q, idx.astype(jnp.int32), scale
+
+
+def pack_scatter_ref(q: jax.Array, idxs: jax.Array, scale: jax.Array,
+                     block: int):
+    vals = q.astype(jnp.float32) * scale
+    nb, k = vals.shape
+    out = jnp.zeros((nb, block), jnp.float32)
+    return jax.vmap(lambda o, i, v: o.at[i].add(v))(out, idxs, vals)
+
+
 def quantize_ref(xb: jax.Array):
     x = xb.astype(jnp.float32)
     scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0,

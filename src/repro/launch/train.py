@@ -20,7 +20,7 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint import BACKENDS, make_store
+from repro.checkpoint import BACKENDS, FORMATS, make_store
 from repro.configs import get_config
 from repro.core.baselines import CheckFreq, FullSync, Gemini, NaiveDC
 from repro.core.config_opt import SystemParams
@@ -35,13 +35,14 @@ STRATEGIES = ("none", "lowdiff", "lowdiff_plus", "checkfreq", "gemini",
 
 
 def build_strategy(name: str, model, store, *, lr, rho, full_interval,
-                   batch_size):
+                   batch_size, compressor="topk"):
     if name == "lowdiff":
         # 0 = auto: seed (f, b) from the Eq. (10) closed form and keep
         # adapting them from observed merge times (online tuning)
         return LowDiff(model, store, rho=rho, lr=lr,
                        full_interval=full_interval or None,
                        batch_size=batch_size or None,
+                       compressor=compressor,
                        sys_params=SystemParams())
     if name == "lowdiff_plus":
         return LowDiffPlus(model, store, lr=lr,
@@ -77,11 +78,13 @@ def run(args):
                         chunk_mb=getattr(args, "chunk_mb", 4.0),
                         max_retries=getattr(args, "max_retries", 4),
                         remote_fault_rate=getattr(args, "remote_fault_rate",
-                                                  0.0))
+                                                  0.0),
+                        fmt=getattr(args, "format", "frame"))
              if args.ckpt_dir else None)
     strat = (build_strategy(args.strategy, model, store, lr=args.lr,
                             rho=args.rho, full_interval=args.full_interval,
-                            batch_size=args.batch_size)
+                            batch_size=args.batch_size,
+                            compressor=getattr(args, "compressor", "topk"))
              if args.strategy != "none" else None)
     mode = ("lowdiff" if args.strategy == "lowdiff" else
             "lowdiff_plus" if args.strategy == "lowdiff_plus" else "dense")
@@ -150,6 +153,15 @@ def main():
     ap.add_argument("--backend", choices=BACKENDS, default="local",
                     help="checkpoint storage backend (local FS, CPU-memory "
                          "tier with async spill, or sharded concurrent)")
+    ap.add_argument("--format", choices=FORMATS, default="frame",
+                    help="checkpoint serialization: 'frame' (streamed "
+                         "zero-copy, memmap reads) or 'npz' (legacy); "
+                         "reads sniff, so old chains recover either way")
+    ap.add_argument("--compressor", choices=("topk", "quant8", "packed"),
+                    default="topk",
+                    help="lowdiff gradient compression: topk sparsification, "
+                         "quant8 blockwise int8, or packed (fused top-k + "
+                         "int8 + wire pack in one Pallas kernel)")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for --backend sharded")
     ap.add_argument("--memory-capacity-mb", type=float, default=None,

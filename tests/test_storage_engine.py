@@ -97,7 +97,7 @@ def test_sharded_splits_across_shard_dirs(tmp_path):
     be = ShardedBackend(root, num_shards=3, split_threshold_bytes=1024)
     tree = sample_tree()
     be.put("full_00000007", tree)
-    shard_files = [os.path.join(root, d, "full_00000007.npz")
+    shard_files = [os.path.join(root, d, "full_00000007.ckpt")
                    for d in sorted(os.listdir(root)) if d.startswith("shard_")]
     present = [p for p in shard_files if os.path.exists(p)]
     assert len(present) >= 2          # leaves genuinely spread over shards
@@ -302,8 +302,8 @@ def test_reopen_prunes_blobs_lost_before_writeback(tmp_path):
     store.save_diff(9, {"g": np.zeros(4, np.float32)})
     store.close()
     # simulate the suffix of writes never landing on disk
-    os.unlink(os.path.join(root, "full_00000008.npz"))
-    os.unlink(os.path.join(root, "diff_00000009.npz"))
+    os.unlink(os.path.join(root, "full_00000008.ckpt"))
+    os.unlink(os.path.join(root, "diff_00000009.ckpt"))
     reopened = make_store(root)
     assert reopened.latest_full()["step"] == 4
     assert_tree_identical(tree, reopened.load_full(reopened.latest_full()))
@@ -345,6 +345,92 @@ def test_pspec_splitter_follows_mesh(tmp_path):
         assert splitter(np.zeros((8, 64), np.float32)) == 1
     # without a mesh: falls back to the largest dimension
     assert splitter2(np.zeros((128, 16), np.float32)) == 0
+
+
+# --------------------------------------------------------------------------
+# durability: atomic_write fsyncs the parent directory
+# --------------------------------------------------------------------------
+
+def test_atomic_write_fsyncs_parent_dir(tmp_path, monkeypatch):
+    """os.replace only becomes durable once the parent directory entry
+    is fsynced; a crash right after the rename must not lose it."""
+    import stat
+
+    from repro.checkpoint import io as cio
+    real_fsync = os.fsync
+    dir_fsyncs = []
+
+    def spy(fd):
+        if stat.S_ISDIR(os.fstat(fd).st_mode):
+            dir_fsyncs.append(fd)
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    target = str(tmp_path / "sub" / "blob.bin")
+    cio.atomic_write(target, lambda f: f.write(b"payload"))
+    assert dir_fsyncs, "parent directory was not fsynced after os.replace"
+    assert open(target, "rb").read() == b"payload"
+
+
+# --------------------------------------------------------------------------
+# chain-aware memory-tier eviction (satellite: newest chain stays in RAM)
+# --------------------------------------------------------------------------
+
+def test_memory_tier_never_evicts_newest_chain(tmp_path):
+    """FIFO eviction must skip every blob of the newest full's replay
+    chain: with the tier full well past capacity, recovery of the
+    latest chain still runs entirely from RAM (proven by deleting the
+    lower tier's blob files before recovering)."""
+    from repro.core import recovery as recmod
+    low_root = str(tmp_path / "low")
+    be = MemoryTierBackend(LocalFSBackend(low_root),
+                           capacity_bytes=48 * 1024)
+    store = CheckpointStore(backend=be)
+    pay = lambda s: {"g": np.full(4096, float(s), np.float32)}  # noqa: E731
+    # old chain (evictable) then the newest chain, ~16KB per blob:
+    # 5 protected blobs > 48KB capacity, so only old blobs may go
+    store.save_full(2, {"params": pay(2), "step": np.int32(2)})
+    for s in (3, 4):
+        store.save_diff(s, pay(s))
+    store.save_full(5, {"params": pay(5), "step": np.int32(5)})
+    for s in (6, 7, 8, 9):
+        store.save_diff(s, pay(s))
+    store.flush()
+    chain = {"full_00000005"} | {f"diff_{s:08d}" for s in (6, 7, 8, 9)}
+    with be._lock:
+        resident = set(be._mem)
+    assert chain <= resident, f"chain blob evicted: {chain - resident}"
+    assert be.evictions > 0            # old-chain blobs did get evicted
+    assert be.stats()["evictions_skipped"] >= 0
+    # recovery survives a full memory tier: even with every lower-tier
+    # blob file gone, the protected chain is served from RAM
+    for f in os.listdir(low_root):
+        if f.endswith((".ckpt", ".npz")):
+            os.unlink(os.path.join(low_root, f))
+    state, diffs = recmod.load_latest_chain(store)
+    assert int(state["step"]) == 5
+    assert [s for s, _ in diffs] == [6, 7, 8, 9]
+    for s, p in diffs:
+        np.testing.assert_array_equal(p["g"], pay(s)["g"])
+    store.close()
+
+
+def test_memory_tier_protect_is_advisory_for_capacity(tmp_path):
+    """Protected blobs may push the tier over its soft capacity, but
+    unprotected blobs are still evicted down to the bound."""
+    be = MemoryTierBackend(LocalFSBackend(str(tmp_path / "l")),
+                           capacity_bytes=8 * 1024)
+    store = CheckpointStore(backend=be)
+    store.save_full(1, {"params": np.zeros(4096, np.float32)})  # 16KB > cap
+    store.save_full(2, {"params": np.zeros(4096, np.float32)})
+    store.flush()
+    with be._lock:
+        resident = set(be._mem)
+    # newest full protected even though it alone exceeds capacity;
+    # the superseded full was evicted to honor the bound
+    assert "full_00000002" in resident
+    assert "full_00000001" not in resident
+    store.close()
 
 
 # --------------------------------------------------------------------------
