@@ -30,6 +30,7 @@ MODULES = [
     ("exp9_10_scaling", "benchmarks.scaling"),
     ("exp11_remote_tier", "benchmarks.remote_tier"),
     ("exp12_serialization", "benchmarks.serialization"),
+    ("exp13_maintenance", "benchmarks.maintenance"),
 ]
 
 

@@ -17,6 +17,8 @@ from repro.checkpoint.backends import (BACKENDS, LocalFSBackend,
                                        StorageBackend, make_backend,
                                        make_pspec_splitter)
 from repro.checkpoint.io import FORMATS, FrameCorruptionError
+from repro.checkpoint.journal import (JournalSegment, ManifestJournal,
+                                      SegmentedManifestJournal)
 from repro.checkpoint.remote import (ChecksumError, FakeObjectStore,
                                      FaultInjector, FilesystemObjectStore,
                                      ObjectStore, RemoteObjectBackend,
@@ -27,11 +29,12 @@ from repro.checkpoint.store import CheckpointStore
 
 __all__ = ["BACKENDS", "FORMATS", "CheckpointStore", "ChecksumError",
            "FakeObjectStore", "FaultInjector", "FilesystemObjectStore",
-           "FrameCorruptionError", "LocalFSBackend", "MemoryTierBackend",
-           "ObjectStore", "RemoteObjectBackend", "RetryExhaustedError",
-           "ShardedBackend", "StorageBackend", "TransientStoreError",
-           "make_backend", "make_pspec_splitter", "make_remote_backend",
-           "make_store"]
+           "FrameCorruptionError", "JournalSegment", "LocalFSBackend",
+           "ManifestJournal", "MemoryTierBackend", "ObjectStore",
+           "RemoteObjectBackend", "RetryExhaustedError",
+           "SegmentedManifestJournal", "ShardedBackend", "StorageBackend",
+           "TransientStoreError", "make_backend", "make_pspec_splitter",
+           "make_remote_backend", "make_store"]
 
 
 def make_store(root: Optional[str], *, backend: str = "local",
@@ -39,13 +42,18 @@ def make_store(root: Optional[str], *, backend: str = "local",
                retention_fulls: int = 0, compact_every: int = 256,
                remote_url: Optional[str] = None, chunk_mb: float = 4.0,
                max_retries: int = 4, remote_fault_rate: float = 0.0,
-               fmt: str = "frame") -> CheckpointStore:
+               fmt: str = "frame", eviction: str = "fifo",
+               host_id: Optional[str] = None) -> CheckpointStore:
     """Build a CheckpointStore over the named backend. ``fmt`` picks the
     write serialization ("frame" streamed zero-copy / "npz" legacy);
-    reads sniff, so existing npz chains stay recoverable either way."""
+    reads sniff, so existing npz chains stay recoverable either way.
+    ``eviction`` selects the memory tier's victim policy (fifo / lru
+    over size-class buckets); ``host_id`` switches the manifest journal
+    to per-host segments for multi-controller jobs."""
     be = make_backend(backend, root, shards=shards, capacity_mb=capacity_mb,
                       remote_url=remote_url, chunk_mb=chunk_mb,
                       max_retries=max_retries,
-                      remote_fault_rate=remote_fault_rate, fmt=fmt)
+                      remote_fault_rate=remote_fault_rate, fmt=fmt,
+                      eviction=eviction)
     return CheckpointStore(root, backend=be, retention_fulls=retention_fulls,
-                           compact_every=compact_every)
+                           compact_every=compact_every, host_id=host_id)

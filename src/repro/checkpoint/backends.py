@@ -26,6 +26,7 @@ import abc
 import json
 import os
 import threading
+import time
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple
@@ -74,6 +75,31 @@ class StorageBackend(abc.ABC):
         checkpoint's replay chain: a capacity-bounded tier must never
         evict them from its fastest level. Default: no-op (durable
         backends have nothing to evict)."""
+
+    def verify(self, key: str) -> Optional[str]:
+        """Integrity-check the blob without returning it: None when
+        intact, else a human-readable corruption reason (the
+        maintenance scrubber quarantines the entry). Raises
+        FileNotFoundError when the blob is absent; infrastructure
+        errors (e.g. a remote tier's exhausted transient retries)
+        propagate — only *corruption* is reported as a reason. The
+        default loads the blob and treats any decode failure as
+        corruption."""
+        try:
+            self.get(key)
+        except FileNotFoundError:
+            raise
+        except Exception as e:  # decode/checksum/struct failures
+            return f"{type(e).__name__}: {e}"
+        return None
+
+    def sweep_orphans(self, min_age_s: float = 60.0) -> int:
+        """Best-effort cleanup of storage debris no committed blob
+        references (crashed half-writes, superseded generations).
+        Returns the number of objects removed. Never touches committed
+        data; ``min_age_s`` shields writes that are in flight right
+        now. Default: nothing to sweep."""
+        return 0
 
     def flush(self) -> None:
         """Block until every accepted put is durable at the lowest tier."""
@@ -154,6 +180,42 @@ class LocalFSBackend(StorageBackend):
     def exists(self, key: str) -> bool:
         return self._find(key) is not None
 
+    def verify(self, key: str) -> Optional[str]:
+        """Re-verify the blob's integrity on disk: every frame leaf's
+        sha256 is recomputed against the header (the full-read check
+        ``get``'s lazy memmap path skips); npz blobs are fully decoded."""
+        path = self._find(key)
+        if path is None:
+            raise FileNotFoundError(f"no blob {key!r} in {self.root}")
+        try:
+            if cio.is_frame_file(path):
+                cio.read_frame(path, verify=True)
+            else:
+                cio.load_any(path, mmap=False)
+        except FileNotFoundError:
+            raise
+        except Exception as e:
+            return f"{type(e).__name__}: {e}"
+        return None
+
+    def sweep_orphans(self, min_age_s: float = 60.0) -> int:
+        """Remove ``.tmp`` debris from atomic writes that crashed before
+        their rename. Age-gated so a write in flight right now is never
+        swept from under its own fsync."""
+        removed = 0
+        cutoff = time.time() - min_age_s
+        for f in os.listdir(self.root):
+            if not f.endswith(".tmp"):
+                continue
+            p = os.path.join(self.root, f)
+            try:
+                if os.path.getmtime(p) <= cutoff:
+                    os.unlink(p)
+                    removed += 1
+            except OSError:
+                pass
+        return removed
+
     def keys(self) -> List[str]:
         out = set()
         for f in os.listdir(self.root):
@@ -178,27 +240,48 @@ class MemoryTierBackend(StorageBackend):
     asynchronous write-back (of the packed snapshot, so later caller
     mutation cannot diverge the tiers), making the RAM tier a
     write-through cache whose reads never touch storage.
-    ``capacity_bytes`` bounds resident bytes: the oldest blobs are
-    evicted after their write-back lands. A capacity without a lower
-    tier would silently drop checkpoints the manifest still references,
-    so it is rejected.
+    ``capacity_bytes`` bounds resident bytes: victim blobs are evicted
+    after their write-back lands. A capacity without a lower tier would
+    silently drop checkpoints the manifest still references, so it is
+    rejected.
+
+    Eviction policy (``eviction``): victims are drawn from size-class
+    buckets (power-of-two ``nbytes`` classes) — the bucket holding the
+    most evictable bytes is victimized first, so one large stale full
+    goes before dozens of small hot differentials. Within the bucket,
+    ``"fifo"`` evicts insertion order and ``"lru"`` least-recently-used
+    (``get`` refreshes recency, so recovery reads keep their chain warm
+    — the read-heavy recovery workload the LRU variant exists for).
+    Either way the chain-protection guard is absolute: protected keys
+    are never victims.
     """
 
     name = "memory"
+    EVICTION_POLICIES = ("fifo", "lru")
 
     def __init__(self, lower: Optional[StorageBackend] = None, *,
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 eviction: str = "fifo"):
         if capacity_bytes is not None and lower is None:
             raise ValueError(
                 "capacity_bytes requires a lower backend to spill to; "
                 "a pure-RAM tier must hold every live checkpoint")
+        if eviction not in self.EVICTION_POLICIES:
+            raise ValueError(f"eviction must be one of "
+                             f"{self.EVICTION_POLICIES}")
         self.lower = lower
         self.persist_root = lower.persist_root if lower is not None else None
         self.fmt = lower.fmt if lower is not None else "memory"
         self.capacity_bytes = capacity_bytes
+        self.eviction = eviction
         self._mem: "OrderedDict[str, Tuple[dict, List[np.ndarray], int]]" \
             = OrderedDict()
         self._bytes = 0
+        #: size-class buckets: class index -> insertion/recency-ordered
+        #: keys, plus per-class resident byte totals (victim selection)
+        self._buckets: Dict[int, "OrderedDict[str, None]"] = {}
+        self._bucket_bytes: Dict[int, int] = {}
+        self._class_of: Dict[str, int] = {}
         self._lock = threading.Lock()
         self._writeback: Optional[ThreadPoolExecutor] = (
             ThreadPoolExecutor(max_workers=1, thread_name_prefix="spill")
@@ -217,6 +300,32 @@ class MemoryTierBackend(StorageBackend):
         self.spills = 0
         self.evictions_skipped = 0
 
+    # -- size-class bucket bookkeeping (all callers hold self._lock) ---
+    @staticmethod
+    def _size_class(nbytes: int) -> int:
+        return int(nbytes).bit_length()
+
+    def _bucket_add(self, key: str, nbytes: int):
+        c = self._size_class(nbytes)
+        self._class_of[key] = c
+        self._buckets.setdefault(c, OrderedDict())[key] = None
+        self._buckets[c].move_to_end(key)
+        self._bucket_bytes[c] = self._bucket_bytes.get(c, 0) + nbytes
+
+    def _bucket_remove(self, key: str, nbytes: int):
+        c = self._class_of.pop(key, None)
+        if c is None:
+            return
+        self._buckets[c].pop(key, None)
+        self._bucket_bytes[c] -= nbytes
+        if not self._buckets[c]:
+            del self._buckets[c], self._bucket_bytes[c]
+
+    def _bucket_touch(self, key: str):
+        c = self._class_of.get(key)
+        if c is not None:
+            self._buckets[c].move_to_end(key)
+
     def put(self, key: str, obj: Any) -> int:
         struct, arrays = cio.pack(obj)
         # np.array COPIES: the tier must own its bytes — a caller
@@ -227,8 +336,10 @@ class MemoryTierBackend(StorageBackend):
         with self._lock:
             if key in self._mem:
                 self._bytes -= self._mem[key][2]
+                self._bucket_remove(key, self._mem[key][2])
             self._mem[key] = (struct, arrays, nbytes)
             self._mem.move_to_end(key)
+            self._bucket_add(key, nbytes)
             self._bytes += nbytes
         if self._writeback is not None:
             # write back the packed snapshot, not the caller's live obj:
@@ -261,6 +372,20 @@ class MemoryTierBackend(StorageBackend):
             # chain) become eviction candidates immediately
             self._evict()
 
+    def _pick_victim(self) -> Optional[str]:
+        """Victim under the active policy (caller holds the lock): the
+        size-class bucket with the most evictable bytes first; within
+        it, oldest (fifo) / least-recently-used (lru) unprotected key.
+        A blob in the newest full's chain is never a victim — evicting
+        it would push latest-chain recovery down to the slow tier, or
+        lose it outright if the write-back later failed."""
+        for c in sorted(self._bucket_bytes,
+                        key=self._bucket_bytes.get, reverse=True):
+            for k in self._buckets[c]:
+                if k not in self._protected:
+                    return k
+        return None
+
     def _evict(self):
         if self.capacity_bytes is None:
             return
@@ -268,13 +393,9 @@ class MemoryTierBackend(StorageBackend):
             with self._lock:
                 if self._bytes <= self.capacity_bytes or len(self._mem) <= 1:
                     return
-                # FIFO over the *evictable* keys only: a blob in the
-                # newest full's chain stays resident even over capacity
-                # (soft cap) — evicting it would push latest-chain
-                # recovery down to the slow tier, or lose it outright
-                # if the write-back later failed
-                key = next((k for k in self._mem
-                            if k not in self._protected), None)
+                # only *evictable* keys are candidates (soft cap: the
+                # protected chain may hold the tier over capacity)
+                key = self._pick_victim()
                 if key is None:
                     self.evictions_skipped += 1
                     return
@@ -285,11 +406,16 @@ class MemoryTierBackend(StorageBackend):
                 item = self._mem.pop(key, None)
                 if item is not None:
                     self._bytes -= item[2]
+                    self._bucket_remove(key, item[2])
                     self.evictions += 1
 
     def get(self, key: str) -> Any:
         with self._lock:
             item = self._mem.get(key)
+            if item is not None and self.eviction == "lru":
+                # recency refresh — recovery reads keep their chain warm
+                self._mem.move_to_end(key)
+                self._bucket_touch(key)
         if item is not None:
             struct, arrays, _ = item
             # copy out: callers may mutate the returned tree (resumed
@@ -310,8 +436,28 @@ class MemoryTierBackend(StorageBackend):
             item = self._mem.pop(key, None)
             if item is not None:
                 self._bytes -= item[2]
+                self._bucket_remove(key, item[2])
         if self.lower is not None:
             self.lower.delete(key)
+
+    def verify(self, key: str) -> Optional[str]:
+        """Scrub the *cold* copy: the RAM tier's arrays are live process
+        memory, so integrity questions are about what the lower tier
+        holds. Blobs resident only in RAM verify trivially."""
+        if self.lower is not None:
+            fut = self._inflight.get(key)
+            if fut is not None:
+                fut.result()       # let an in-flight write-back land
+            if self.lower.exists(key):
+                return self.lower.verify(key)
+        with self._lock:
+            if key in self._mem:
+                return None
+        raise FileNotFoundError(f"memory tier has no blob {key!r}")
+
+    def sweep_orphans(self, min_age_s: float = 60.0) -> int:
+        return (self.lower.sweep_orphans(min_age_s)
+                if self.lower is not None else 0)
 
     def exists(self, key: str) -> bool:
         with self._lock:
@@ -363,6 +509,8 @@ class MemoryTierBackend(StorageBackend):
                 "resident_bytes": nbytes, "evictions": self.evictions,
                 "evictions_skipped": self.evictions_skipped,
                 "protected": len(self._protected),
+                "eviction_policy": self.eviction,
+                "size_classes": len(self._buckets),
                 "spills": self.spills,
                 "writeback_errors": len(self._wb_errors),
                 "lower": self.lower.stats() if self.lower else None}
@@ -454,6 +602,10 @@ class ShardedBackend(StorageBackend):
         self._pool = ThreadPoolExecutor(
             max_workers=max_workers or num_shards,
             thread_name_prefix="shard-io")
+        # keys whose shard files are being written right now (meta not
+        # yet committed): the orphan sweeper must not reap them
+        self._active_puts: set = set()
+        self._active_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _shard_dir(self, k: int) -> str:
@@ -499,6 +651,15 @@ class ShardedBackend(StorageBackend):
 
     # ------------------------------------------------------------------
     def put(self, key: str, obj: Any) -> int:
+        with self._active_lock:
+            self._active_puts.add(key)
+        try:
+            return self._put(key, obj)
+        finally:
+            with self._active_lock:
+                self._active_puts.discard(key)
+
+    def _put(self, key: str, obj: Any) -> int:
         struct, arrays = cio.pack(obj)
         payloads: List[Dict[str, np.ndarray]] = [
             {} for _ in range(self.num_shards)]
@@ -573,6 +734,57 @@ class ShardedBackend(StorageBackend):
     def exists(self, key: str) -> bool:
         return os.path.exists(self._meta_path(key))
 
+    def verify(self, key: str) -> Optional[str]:
+        """Re-verify every shard file: frame shards recompute each leaf
+        piece's sha256, npz shards fully decode. The meta file itself is
+        validated as JSON first."""
+        try:
+            with open(self._meta_path(key), encoding="utf-8") as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            raise FileNotFoundError(f"no sharded blob {key!r} in {self.root}")
+        except Exception as e:
+            return f"meta: {type(e).__name__}: {e}"
+        for k in meta["shards"]:
+            try:
+                path = self._find_shard(k, key)
+                if cio.is_frame_file(path):
+                    cio.read_frame(path, verify=True)
+                else:
+                    cio.load_npz(path)
+            except Exception as e:
+                # a missing shard file *is* corruption here: the meta
+                # commit point says the blob should be whole
+                return f"shard {k}: {type(e).__name__}: {e}"
+        return None
+
+    def sweep_orphans(self, min_age_s: float = 60.0) -> int:
+        """Reap shard files whose key has no committed meta file — the
+        leftovers of a put that crashed before its commit point. Keys
+        with a put in flight right now are skipped."""
+        with self._active_lock:
+            active = set(self._active_puts)
+        removed = 0
+        cutoff = time.time() - min_age_s
+        for d in os.listdir(self.root):
+            if not d.startswith("shard_"):
+                continue
+            for f in os.listdir(os.path.join(self.root, d)):
+                for suffix in self.SHARD_SUFFIXES.values():
+                    if not f.endswith(suffix):
+                        continue
+                    key = f[:-len(suffix)]
+                    if key in active or self.exists(key):
+                        continue
+                    p = os.path.join(self.root, d, f)
+                    try:
+                        if os.path.getmtime(p) <= cutoff:
+                            os.unlink(p)
+                            removed += 1
+                    except OSError:
+                        pass
+        return removed
+
     def keys(self) -> List[str]:
         n = len(self.META_SUFFIX)
         return sorted(f[:-n] for f in os.listdir(self.root)
@@ -602,7 +814,8 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
                  remote_url: Optional[str] = None,
                  chunk_mb: float = 4.0, max_retries: int = 4,
                  remote_fault_rate: float = 0.0,
-                 fmt: str = "frame") -> StorageBackend:
+                 fmt: str = "frame",
+                 eviction: str = "fifo") -> StorageBackend:
     """Build a backend by name. ``memory`` layers the RAM tier over a
     LocalFS lower tier at ``root`` (pure-RAM when root is None or
     memory_spill is False). ``remote`` layers the RAM tier over a
@@ -619,7 +832,8 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
         lower = (LocalFSBackend(root, fmt=fmt)
                  if root is not None and memory_spill else None)
         cap = int(capacity_mb * 2**20) if capacity_mb else None
-        return MemoryTierBackend(lower, capacity_bytes=cap)
+        return MemoryTierBackend(lower, capacity_bytes=cap,
+                                 eviction=eviction)
     if name == "sharded":
         if root is None:
             raise ValueError("sharded backend requires a root directory")
@@ -639,5 +853,6 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
             url, chunk_bytes=int(chunk_mb * 2**20), max_retries=max_retries,
             journal_root=root, fault_rate=remote_fault_rate, fmt=fmt)
         cap = int(capacity_mb * 2**20) if capacity_mb else None
-        return MemoryTierBackend(lower, capacity_bytes=cap)
+        return MemoryTierBackend(lower, capacity_bytes=cap,
+                                 eviction=eviction)
     raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")

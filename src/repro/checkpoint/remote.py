@@ -318,6 +318,9 @@ class RemoteObjectBackend(StorageBackend):
         #: lets put() skip the stale-chunk sweep on first writes (the
         #: overwhelmingly common case under step-named keys)
         self._live_gens: Dict[str, str] = {}
+        #: keys with an upload in flight (chunks landing, index not yet
+        #: committed): the maintenance orphan sweep must not reap them
+        self._active_puts: set = set()
         self.puts = 0
         self.gets = 0
         self.retries = 0
@@ -368,6 +371,15 @@ class RemoteObjectBackend(StorageBackend):
                 for o in range(0, len(blob), self.chunk_bytes))
 
     def put(self, key: str, obj: Any) -> int:
+        with self._lock:
+            self._active_puts.add(key)
+        try:
+            return self._put(key, obj)
+        finally:
+            with self._lock:
+                self._active_puts.discard(key)
+
+    def _put(self, key: str, obj: Any) -> int:
         # chunks carry a per-put generation prefix so a re-put never
         # overwrites the chunks the live index points at: until the new
         # index commits, the old version stays fully readable
@@ -456,6 +468,70 @@ class RemoteObjectBackend(StorageBackend):
             self.store.delete_object(name)
         with self._lock:
             self._live_gens.pop(key, None)
+
+    def verify(self, key: str) -> Optional[str]:
+        """Scrub hook: re-fetch the index and every chunk, checking each
+        sha256, without deserializing the pytree. A checksum that stays
+        wrong through the bounded retries is *corruption* (returned as a
+        reason, the caller quarantines); transient-exhaustion on clean
+        infrastructure errors propagates — a flaky wire must not
+        quarantine an intact blob."""
+        try:
+            index = self._load_index(key)
+        except FileNotFoundError:
+            raise
+        except RetryExhaustedError as e:
+            if isinstance(e.__cause__, ChecksumError):
+                return f"index for {key!r} unparseable"
+            raise
+        for entry in index["chunks"]:
+            try:
+                self._fetch_chunk(entry)
+            except FileNotFoundError:
+                return f"chunk {entry['name']} missing under live index"
+            except RetryExhaustedError as e:
+                if isinstance(e.__cause__, ChecksumError):
+                    return f"chunk {entry['name']} sha256 mismatch"
+                raise
+        return None
+
+    def sweep_orphans(self, min_age_s: float = 60.0) -> int:
+        """Reap chunk objects no committed index references: superseded
+        generations a crashed re-put never swept, and uploads that died
+        before their commit point. Keys with a put in flight are
+        skipped (this backend is the single writer for its key space).
+        Object stores expose no reliable mtime here, so ``min_age_s``
+        is advisory only. Failures are harmless — orphans cost bucket
+        bytes, never correctness."""
+        with self._lock:
+            active = set(self._active_puts)
+        by_key: Dict[str, List[str]] = {}
+        for name in self.store.list_objects():
+            if "/" not in name:
+                continue
+            key, _, leaf = name.rpartition("/")
+            if leaf == self.INDEX:
+                continue
+            by_key.setdefault(key, []).append(name)
+        removed = 0
+        for key, names in by_key.items():
+            if key in active:
+                continue
+            try:
+                live = f"{key}/{self._load_index(key)['gen']}."
+            except FileNotFoundError:
+                live = None              # no commit point: all orphans
+            except (RetryExhaustedError, TransientStoreError):
+                continue                 # unreadable index: leave alone
+            for name in names:
+                if live is not None and name.startswith(live):
+                    continue
+                try:
+                    self.store.delete_object(name)
+                    removed += 1
+                except TransientStoreError:
+                    pass
+        return removed
 
     def exists(self, key: str) -> bool:
         # metadata-only, but still fault-prone on a real wire: retry

@@ -17,22 +17,30 @@ Chain-aware garbage collection (`gc`) deletes full checkpoints and
 differential blobs superseded by a newer full, keeping
 ``retention_fulls`` fulls plus everything needed to replay the latest
 chain — Check-N-Run-style quota management for differential chains.
+The mark phase (:meth:`gc_plan`) and sweep phase (:meth:`gc_apply`)
+are split so the background maintenance service can journal its
+progress and sweep in bounded slices; :meth:`gc` composes them for the
+synchronous fallback path.
+
+``host_id`` selects the multi-controller journal: each host appends to
+its own :class:`~repro.checkpoint.journal.SegmentedManifestJournal`
+segment, and every reader reconstructs the same merged manifest.
 """
 from __future__ import annotations
 
-import os
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.checkpoint.backends import LocalFSBackend, StorageBackend
 from repro.checkpoint.journal import (ManifestJournal, MemoryJournal,
-                                      _entry_key)
+                                      SegmentedManifestJournal, _entry_key)
 
 
 class CheckpointStore:
     def __init__(self, root: Optional[str] = None, *,
                  backend: Optional[StorageBackend] = None,
-                 retention_fulls: int = 0, compact_every: int = 256):
+                 retention_fulls: int = 0, compact_every: int = 256,
+                 host_id: Optional[str] = None):
         if backend is None:
             if root is None:
                 raise ValueError("CheckpointStore needs a root or a backend")
@@ -42,13 +50,23 @@ class CheckpointStore:
         self.retention_fulls = retention_fulls
         self._lock = threading.RLock()
         if backend.persist_root is not None:
-            self.journal = ManifestJournal(backend.persist_root,
-                                           compact_every=compact_every)
+            if host_id is not None:
+                self.journal = SegmentedManifestJournal(
+                    backend.persist_root, host=host_id,
+                    compact_every=compact_every)
+            else:
+                self.journal = ManifestJournal(backend.persist_root,
+                                               compact_every=compact_every)
         else:
             self.journal = MemoryJournal()
+        self.host_id = host_id
+        #: attached background MaintenanceService (see
+        #: repro.maintenance); None means synchronous fallbacks
+        self.maintenance = None
         self.bytes_written = 0
         self.writes = 0
         self.gc_deleted = 0
+        self.quarantined = 0
         self._prune_missing()
         self._update_protected()
 
@@ -78,7 +96,7 @@ class CheckpointStore:
                                "path": self.backend.url(key), "bytes": n}, n)
         self._update_protected()
         if self.retention_fulls:
-            self.gc()
+            self.request_gc()
         return key
 
     def save_diff(self, step: int, payload) -> str:
@@ -192,49 +210,182 @@ class CheckpointStore:
         return sorted(out.items())
 
     # ------------------------------------------------------------------
-    def gc(self, retention_fulls: Optional[int] = None) -> Dict[str, int]:
-        """Delete blobs superseded by a newer full checkpoint.
-
-        Keeps the newest ``retention_fulls`` fulls and every
+    # garbage collection: mark (plan) / sweep (apply)
+    # ------------------------------------------------------------------
+    def gc_plan(self, retention_fulls: Optional[int] = None
+                ) -> List[Tuple[str, str]]:
+        """Mark phase: compute the ``[(kind, key), ...]`` list of blobs
+        superseded by a newer full checkpoint — no I/O, manifest lock
+        only. Keeps the newest ``retention_fulls`` fulls and every
         differential/batch that could still be needed to replay a chain
         from the *oldest retained* full (a batch straddling the cutoff
-        is kept whole). Returns per-kind delete counts.
-        """
+        is kept whole)."""
         keep = (self.retention_fulls if retention_fulls is None
                 else retention_fulls)
         if keep < 1:
-            return {}
-        removed = {"fulls": 0, "diffs": 0, "batches": 0}
+            return []
+        doomed: List[Tuple[str, str]] = []
         with self._lock:
             fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"])
             if len(fulls) <= keep:
-                return removed
+                return doomed
             cutoff = fulls[-keep]["step"]
-            doomed: List[Tuple[str, dict]] = []
             for e in fulls[:-keep]:
-                doomed.append(("fulls", e))
+                doomed.append(("fulls", self._entry_key(e)))
             for e in self.manifest["diffs"]:
                 if e["step"] <= cutoff:
-                    doomed.append(("diffs", e))
+                    doomed.append(("diffs", self._entry_key(e)))
             for e in self.manifest["batches"]:
                 if e["last"] <= cutoff:
-                    doomed.append(("batches", e))
-            for kind, e in doomed:
-                key = self._entry_key(e)
+                    doomed.append(("batches", self._entry_key(e)))
+        return doomed
+
+    def _live_chain_keys(self, keep: int) -> set:
+        """Keys the newest ``keep`` retained chains still need — the
+        retained fulls plus every diff/batch replayable after the
+        oldest retained full."""
+        keys = set()
+        with self._lock:
+            fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"])
+            retained = fulls[-max(keep, 1):]
+            if not retained:
+                return keys
+            cutoff = retained[0]["step"]
+            keys.update(self._entry_key(e) for e in retained)
+            keys.update(self._entry_key(e) for e in self.manifest["diffs"]
+                        if e["step"] > cutoff)
+            keys.update(self._entry_key(e) for e in self.manifest["batches"]
+                        if e["last"] > cutoff)
+        return keys
+
+    def gc_apply(self, doomed: List[Tuple[str, str]],
+                 retention_fulls: Optional[int] = None,
+                 crash_hook=None) -> Dict[str, int]:
+        """Sweep phase: journal the deletion, then delete the blob, for
+        each marked ``(kind, key)``. Idempotent — re-applying a slice
+        after a crash re-journals a no-op del and re-deletes an absent
+        blob. A key that re-entered the newest retained chains since the
+        plan was computed (a stale plan after a same-step re-put) is
+        skipped: the sweep must never delete a live-chain blob.
+
+        Blob I/O runs *outside* the manifest lock so a background sweep
+        never stalls the training hot path's journal appends.
+        ``crash_hook(point, key)`` is a test seam fired between the
+        journal del and the backend delete."""
+        keep = (self.retention_fulls if retention_fulls is None
+                else retention_fulls)
+        live = self._live_chain_keys(keep)
+        removed = {"fulls": 0, "diffs": 0, "batches": 0}
+        for kind, key in doomed:
+            if key in live:
+                continue
+            with self._lock:
                 self.journal.append("del", kind, key=key)
-                self.backend.delete(key)
-                removed[kind] += 1
+            if crash_hook is not None:
+                crash_hook("gc:mid_delete", key)
+            self.backend.delete(key)
+            removed[kind] = removed.get(kind, 0) + 1
+            with self._lock:
                 self.gc_deleted += 1
         self._update_protected()
         return removed
 
+    def gc(self, retention_fulls: Optional[int] = None) -> Dict[str, int]:
+        """Synchronous mark + sweep (the ``--maintenance off`` path and
+        explicit calls). Returns per-kind delete counts."""
+        doomed = self.gc_plan(retention_fulls)
+        if not doomed:
+            keep = (self.retention_fulls if retention_fulls is None
+                    else retention_fulls)
+            return {} if keep < 1 else {"fulls": 0, "diffs": 0,
+                                        "batches": 0}
+        return self.gc_apply(doomed, retention_fulls)
+
+    def request_gc(self, retention_fulls: Optional[int] = None):
+        """Route GC off the hot path: schedule it on the attached
+        maintenance service (non-blocking) or fall back to a
+        synchronous sweep when no service is attached."""
+        svc = self.maintenance
+        if svc is not None and svc.running:
+            svc.request_gc(retention_fulls)
+            return None
+        return self.gc(retention_fulls)
+
+    def scrub_targets(self) -> List[Tuple[str, str]]:
+        """Every chain entry the integrity scrubber should walk, as
+        ``(kind, key)`` — a point-in-time snapshot under the lock."""
+        with self._lock:
+            return [(kind, self._entry_key(e))
+                    for kind in ("fulls", "diffs", "batches")
+                    for e in self.manifest[kind]]
+
+    def merge_journal(self):
+        """Fold journal state into its snapshot under the store lock: a
+        segmented journal merges every host's segment (the
+        multi-controller merge step); a plain journal just compacts."""
+        with self._lock:
+            self.journal.compact()
+
     # ------------------------------------------------------------------
-    def flush(self):
+    # quarantine (integrity scrubber)
+    # ------------------------------------------------------------------
+    def quarantine(self, kind: str, key: str, reason: str) -> bool:
+        """Move a corrupt blob's manifest entry out of its chain kind
+        into the ``quarantined`` list: recovery skips it proactively
+        (`load_latest_chain` falls back to an older full / the chain
+        cuts at the gap) instead of tripping over the corruption at
+        restore time. The blob itself is kept for forensics; GC of
+        quarantined entries is explicit (:meth:`drop_quarantined`)."""
+        with self._lock:
+            entry = next((e for e in self.manifest.get(kind, [])
+                          if self._entry_key(e) == key), None)
+            if entry is None:
+                return False
+            self.journal.append("del", kind, key=key)
+            q = dict(entry)
+            q.update({"key": key, "src_kind": kind, "reason": reason})
+            self.journal.append("add", "quarantined", entry=q)
+            self.quarantined += 1
+        self._update_protected()
+        return True
+
+    def drop_quarantined(self) -> int:
+        """Delete quarantined blobs and their records. Returns count."""
+        with self._lock:
+            entries = list(self.manifest.get("quarantined", []))
+        n = 0
+        for e in entries:
+            key = self._entry_key(e)
+            with self._lock:
+                self.journal.append("del", "quarantined", key=key)
+            self.backend.delete(key)
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    def flush(self, timeout: Optional[float] = None):
         """Block until every accepted write is durable at the lowest
-        backend tier."""
+        backend tier AND every pending maintenance slice has drained —
+        same deadline/error-surfacing contract as the persist queue
+        (maintenance task failures re-raise here as
+        ``CheckpointingError``)."""
         self.backend.flush()
+        if self.maintenance is not None:
+            self.maintenance.drain(timeout)
+
+    def attach_maintenance(self, service):
+        """Attach (or detach with None) a background MaintenanceService;
+        `save_full`'s retention GC and `flush`/`close` route through
+        it once attached."""
+        self.maintenance = service
 
     def close(self):
+        svc, self.maintenance = self.maintenance, None
+        if svc is not None:
+            svc.stop()
+            # stats() keeps reporting the service's final numbers after
+            # close — the launcher prints strategy stats post-close
+            self._maint_final = svc.stats()
         self.backend.close()
         self.journal.close()
 
@@ -245,5 +396,10 @@ class CheckpointStore:
                     "diffs": len(self.manifest["diffs"]),
                     "batches": len(self.manifest["batches"]),
                     "gc_deleted": self.gc_deleted,
+                    "quarantined": len(self.manifest.get("quarantined", [])),
                     "journal": self.journal.stats(),
-                    "backend": self.backend.stats()}
+                    "backend": self.backend.stats(),
+                    "maintenance": (self.maintenance.stats()
+                                    if self.maintenance is not None
+                                    else getattr(self, "_maint_final",
+                                                 None))}

@@ -184,19 +184,22 @@ class LowDiff:
 
     def flush(self, timeout: Optional[float] = None):
         """Block until every queued differential/full write is durable
-        (including the storage backend's own async tiers).
+        (including the storage backend's own async tiers) and every
+        pending maintenance slice has drained.
 
         Never hangs: a handler exception on the consumer thread is
         re-raised here as :class:`~repro.core.reusing_queue.
-        CheckpointingError`, and the wait is bounded by ``timeout``
-        (default ``flush_timeout``)."""
-        wait_drained(self.queue, lambda: self._processed, self._consumer,
-                     timeout if timeout is not None else self.flush_timeout)
+        CheckpointingError`, the wait is bounded by ``timeout`` (default
+        ``flush_timeout``), and the store-level flush — including the
+        maintenance drain — shares the same deadline budget."""
+        t = timeout if timeout is not None else self.flush_timeout
+        deadline = time.monotonic() + t
+        wait_drained(self.queue, lambda: self._processed, self._consumer, t)
         self._flush_batch()
         for f in self._pending:
             f.result()
         self._pending.clear()
-        self.store.flush()
+        self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
 
     def close(self):
         try:

@@ -178,17 +178,20 @@ class LowDiffPlus:
 
     def flush(self, timeout: Optional[float] = None):
         """Block until every enqueued gradient is applied to the replica
-        and every scheduled persist is durable. Never hangs: consumer
-        failures re-raise here and the wait is deadline-bounded."""
-        wait_drained(self.queue, lambda: self._processed, self._consumer,
-                     timeout if timeout is not None else self.flush_timeout)
+        and every scheduled persist (plus any pending maintenance
+        slice) is durable. Never hangs: consumer failures re-raise here
+        and the wait — including the store's maintenance drain — is
+        deadline-bounded."""
+        t = timeout if timeout is not None else self.flush_timeout
+        deadline = time.monotonic() + t
+        wait_drained(self.queue, lambda: self._processed, self._consumer, t)
         with self._pending_lock:
             pending = list(self._pending)
         for f in pending:
             f.result()                  # a failure keeps the rest pending
         with self._pending_lock:
             self._pending = [f for f in self._pending if f not in pending]
-        self.store.flush()
+        self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
 
     def close(self):
         try:

@@ -31,12 +31,16 @@ def load_latest_chain(store):
     re-assembles sharded leaves, hits the memory tier, or fetches and
     checksum-verifies remote chunks transparently).
 
-    A full checkpoint that cannot be read back — missing blob, or a
-    remote tier whose bounded re-fetches never produced checksum-clean
-    chunks — does not abort recovery: the loader falls back to the next
-    older full and replays the longer differential chain from there.
-    Returns (state, [(step, payload), ...]); raises FileNotFoundError
-    when no full checkpoint is loadable."""
+    A full checkpoint that cannot be read back — missing blob, a
+    corrupt frame (leaf sha256 mismatch), or a remote tier whose
+    bounded re-fetches never produced checksum-clean chunks — does not
+    abort recovery: the loader falls back to the next older full and
+    replays the longer differential chain from there. Entries the
+    maintenance scrubber quarantined were already removed from the
+    manifest's chain kinds, so they are skipped proactively without
+    touching storage at all. Returns (state, [(step, payload), ...]);
+    raises FileNotFoundError when no full checkpoint is loadable."""
+    from repro.checkpoint.io import FrameCorruptionError
     from repro.checkpoint.remote import RetryExhaustedError
     fulls = sorted(store.manifest["fulls"], key=lambda e: e["step"],
                    reverse=True)
@@ -46,7 +50,8 @@ def load_latest_chain(store):
     for entry in fulls:
         try:
             state = store.load_full(entry)
-        except (FileNotFoundError, RetryExhaustedError) as e:
+        except (FileNotFoundError, RetryExhaustedError,
+                FrameCorruptionError) as e:
             last_err = e
             continue
         return state, store.diffs_after(entry["step"])

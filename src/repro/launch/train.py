@@ -21,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import BACKENDS, FORMATS, make_store
+from repro.maintenance import MaintenanceService
 from repro.configs import get_config
 from repro.core.baselines import CheckFreq, FullSync, Gemini, NaiveDC
 from repro.core.config_opt import SystemParams
@@ -79,8 +80,20 @@ def run(args):
                         max_retries=getattr(args, "max_retries", 4),
                         remote_fault_rate=getattr(args, "remote_fault_rate",
                                                   0.0),
-                        fmt=getattr(args, "format", "frame"))
+                        fmt=getattr(args, "format", "frame"),
+                        eviction=getattr(args, "eviction", "fifo"),
+                        host_id=getattr(args, "host_id", None))
              if args.ckpt_dir else None)
+    if store is not None and getattr(args, "maintenance", "off") == "on":
+        # background maintenance: retention GC sweeps in journaled
+        # slices off the step loop, the scrubber re-verifies cold blobs
+        # periodically, and an unfinished task from a previous crash is
+        # resumed before new work. store.close() stops the worker.
+        svc = MaintenanceService(
+            store, gc_slice=getattr(args, "gc_slice", 64),
+            scrub_interval=getattr(args, "scrub_interval", 0.0))
+        store.attach_maintenance(svc)
+        svc.start()
     strat = (build_strategy(args.strategy, model, store, lr=args.lr,
                             rho=args.rho, full_interval=args.full_interval,
                             batch_size=args.batch_size,
@@ -180,6 +193,23 @@ def main():
     ap.add_argument("--retention", type=int, default=0,
                     help="keep this many full checkpoints + their chains "
                          "(0 = never garbage-collect)")
+    ap.add_argument("--eviction", choices=("fifo", "lru"), default="fifo",
+                    help="memory-tier eviction policy over size-class "
+                         "buckets; lru refreshes recency on recovery reads")
+    ap.add_argument("--maintenance", choices=("on", "off"), default="off",
+                    help="background maintenance service: journaled "
+                         "resumable GC + integrity scrub off the step "
+                         "loop (off = synchronous GC fallback)")
+    ap.add_argument("--gc-slice", type=int, default=64,
+                    help="keys swept per journaled GC slice (bounded "
+                         "work between progress records)")
+    ap.add_argument("--scrub-interval", type=float, default=0.0,
+                    help="seconds between background integrity scrubs "
+                         "(0 = scrub only on demand)")
+    ap.add_argument("--host-id", default=None,
+                    help="journal segment id for multi-controller jobs: "
+                         "each host appends to its own manifest segment, "
+                         "merged deterministically on read/compaction")
     ap.add_argument("--clean", action="store_true", default=True)
     ap.add_argument("--fail-at", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,20 @@
+"""Checkpoint maintenance service: crash-resumable background GC,
+integrity scrubbing, and multi-controller journal-segment merging.
+
+Usage::
+
+    store = make_store(root, retention_fulls=2)
+    svc = MaintenanceService(store, gc_slice=64, scrub_interval=30.0)
+    store.attach_maintenance(svc)
+    svc.start()                 # resumes any crashed task first
+    ...                         # save_full() now schedules GC async
+    store.flush()               # drains pending maintenance slices
+    store.close()               # stops the service
+"""
+from __future__ import annotations
+
+from repro.maintenance.progress import MemoryProgress, ProgressJournal
+from repro.maintenance.service import InjectedCrash, MaintenanceService
+
+__all__ = ["InjectedCrash", "MaintenanceService", "MemoryProgress",
+           "ProgressJournal"]

@@ -1,0 +1,352 @@
+"""Journaled, crash-resumable background maintenance for the
+checkpoint store.
+
+Per-iteration differential checkpointing produces thousands of small
+blobs per hour; metadata upkeep — garbage collection, integrity
+scrubbing, journal compaction — becomes a first-order cost that must
+never stall the training hot path (Check-N-Run / TierCheck both report
+maintenance, not the write itself, dominating sustained checkpointing
+cost at high frequency). :class:`MaintenanceService` owns one worker
+thread and a set of *idempotent* tasks that checkpoint their own
+progress into a :mod:`~repro.maintenance.progress` journal:
+
+* **Resumable GC** — the mark phase (``CheckpointStore.gc_plan``) runs
+  under the manifest lock only and its plan is journaled; the sweep
+  runs in bounded ``gc_slice``-key slices with a cursor record after
+  each, so a crash at *any* boundary (after mark, between the manifest
+  del and the blob delete, between slices) loses no live-chain blob and
+  leaks no dead one — the restarted service finishes the sweep from
+  the journaled cursor.
+* **Integrity scrub** — walks cold blobs, re-verifies every frame
+  leaf / remote chunk sha256 (``StorageBackend.verify``), and
+  quarantines corrupt entries so recovery skips them proactively
+  instead of discovering them at restore time. Completion also sweeps
+  storage orphans (``StorageBackend.sweep_orphans``).
+* **Journal-segment merge** — folds multi-controller journal segments
+  into the shared snapshot (``CheckpointStore.merge_journal``); the
+  snapshot write is atomic and watermark-guarded, so a crash mid-merge
+  re-merges idempotently.
+
+Concurrency discipline: the worker never holds the store's manifest
+lock across blob I/O, task errors surface from :meth:`drain` with the
+same deadline/error contract as the persist queue
+(:class:`~repro.core.reusing_queue.CheckpointingError`), and
+``crash_hook`` is the test seam the fault-injection harness uses to
+kill the worker at named task boundaries.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.checkpoint.remote import (RetryExhaustedError,
+                                     TransientStoreError)
+from repro.core.reusing_queue import CheckpointingError
+from repro.maintenance.progress import MemoryProgress, ProgressJournal
+
+
+class InjectedCrash(Exception):
+    """Raised by a test crash_hook to simulate the maintenance worker
+    being killed at a task boundary: the worker thread exits
+    immediately, journaling nothing further — exactly what a SIGKILL
+    between two journal appends leaves behind."""
+
+
+class MaintenanceService:
+    """Background task runtime for a :class:`~repro.checkpoint.store.
+    CheckpointStore`. One worker thread; tasks are queued with
+    ``request_*`` (non-blocking), drained with :meth:`drain`, and
+    resumed from the progress journal on :meth:`start`."""
+
+    def __init__(self, store, *, gc_slice: int = 64, scrub_slice: int = 8,
+                 scrub_interval: float = 0.0, orphan_min_age_s: float = 60.0,
+                 drain_timeout: float = 120.0):
+        self.store = store
+        self.gc_slice = max(1, int(gc_slice))
+        self.scrub_slice = max(1, int(scrub_slice))
+        self.scrub_interval = scrub_interval
+        self.orphan_min_age_s = orphan_min_age_s
+        self.drain_timeout = drain_timeout
+        root = store.backend.persist_root
+        self.progress = (
+            ProgressJournal(root, host=getattr(store, "host_id", None))
+            if root is not None else MemoryProgress())
+        self._q: "queue.Queue[Tuple[str, Any]]" = queue.Queue()
+        self._cv = threading.Condition()
+        self._pending = 0            # submitted but not yet finished
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._last_scrub = time.monotonic()
+        #: the exception that killed the worker, surfaced by drain()
+        self.error: Optional[BaseException] = None
+        #: test seam: callable(point:str) fired at named task
+        #: boundaries; raising InjectedCrash simulates a worker kill
+        self.crash_hook = None
+        self.gc_runs = 0
+        self.gc_swept = 0
+        self.scrub_runs = 0
+        self.scrubbed = 0
+        self.scrub_transient_skips = 0
+        self.corrupt_found = 0
+        self.orphans_swept = 0
+        self.merge_runs = 0
+        self.resumed = 0
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "MaintenanceService":
+        """Start (or restart) the worker. Unfinished tasks found in the
+        progress journal (a previous crash, stop, or surfaced failure)
+        are enqueued first, so crash-resume needs no caller action
+        beyond constructing + starting. An explicit start() clears a
+        previously surfaced error: journaled work is re-attempted,
+        un-journaled queued requests from the dead worker are dropped
+        (they are idempotent and re-requested by their callers)."""
+        if self.running:
+            return self
+        self._stop.clear()
+        self.error = None
+        with self._cv:
+            self._pending = 0
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        for rec in self.progress.pending():
+            self._submit(("resume", rec))
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="ckpt-maintenance")
+        self._thread.start()
+        return self
+
+    def stop(self, join_timeout: float = 10.0) -> None:
+        """Stop after the current slice. Pending planned work stays in
+        the progress journal and resumes on the next start()."""
+        self._stop.set()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout=join_timeout)
+        self.progress.close()
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every requested task has finished — the same
+        deadline/error-surfacing contract as the persist queue: a task
+        failure re-raises here as CheckpointingError, and the wait is
+        bounded (TimeoutError) so flush() can never hang on a dead
+        worker."""
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else self.drain_timeout)
+        with self._cv:
+            while True:
+                if self.error is not None:
+                    raise CheckpointingError(
+                        "maintenance worker failed; pending slices were "
+                        "not applied") from self.error
+                if self._pending == 0:
+                    return
+                if not self.running:
+                    raise CheckpointingError(
+                        f"maintenance worker is not running but "
+                        f"{self._pending} task(s) remain pending")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"maintenance drain did not complete in time "
+                        f"({self._pending} task(s) pending)")
+                self._cv.wait(min(remaining, 0.05))
+
+    # ------------------------------------------------------------------
+    # requests (non-blocking; called from the training/persist threads)
+    # ------------------------------------------------------------------
+    def request_gc(self, retention_fulls: Optional[int] = None) -> None:
+        self._submit(("gc", retention_fulls))
+
+    def request_scrub(self) -> None:
+        self._submit(("scrub", None))
+
+    def request_merge(self) -> None:
+        self._submit(("merge", None))
+
+    def _submit(self, req: Tuple[str, Any]) -> None:
+        with self._cv:
+            self._pending += 1
+        self._q.put(req)
+
+    # ------------------------------------------------------------------
+    # worker
+    # ------------------------------------------------------------------
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                req = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if (self.scrub_interval > 0
+                        and time.monotonic() - self._last_scrub
+                        >= self.scrub_interval):
+                    self._last_scrub = time.monotonic()
+                    self._submit(("scrub", None))
+                continue
+            try:
+                self._execute(req)
+            except InjectedCrash:
+                # simulated kill: no bookkeeping, no further journal
+                # records — pending work is exactly what a real crash
+                # leaves for the next start() to resume
+                return
+            except BaseException as e:  # noqa: B036 - surfaced by drain
+                with self._cv:
+                    self.error = e
+                    self._pending -= 1
+                    self._cv.notify_all()
+                return
+            with self._cv:
+                self._pending -= 1
+                self._cv.notify_all()
+
+    def _crash(self, point: str) -> None:
+        if self.crash_hook is not None:
+            self.crash_hook(point)
+
+    def _execute(self, req: Tuple[str, Any]) -> None:
+        kind, arg = req
+        if kind == "gc":
+            self._run_gc(arg)
+        elif kind == "scrub":
+            self._run_scrub()
+        elif kind == "merge":
+            self._run_merge()
+        elif kind == "resume":
+            self._resume(arg)
+        else:
+            raise ValueError(f"unknown maintenance request {kind!r}")
+
+    def _resume(self, rec: dict) -> None:
+        task = rec.get("task")
+        self.resumed += 1
+        if task == "gc":
+            self._gc_sweep(int(rec["id"]),
+                           [tuple(d) for d in rec.get("doomed", [])],
+                           rec.get("retention"), int(rec.get("pos", 0)))
+        elif task == "scrub":
+            self._scrub_sweep(int(rec["id"]),
+                              [tuple(e) for e in rec.get("entries", [])],
+                              int(rec.get("pos", 0)))
+        elif task == "merge":
+            # the merge itself is atomic + watermark-idempotent: redo it
+            self._merge_step(int(rec["id"]))
+        else:
+            raise ValueError(f"unknown journaled task {task!r}")
+
+    # ------------------------------------------------------------------
+    # resumable GC: mark (journaled plan) -> sweep (journaled cursor)
+    # ------------------------------------------------------------------
+    def _run_gc(self, retention_fulls: Optional[int]) -> None:
+        doomed = self.store.gc_plan(retention_fulls)
+        if not doomed:
+            return
+        tid = self.progress.next_id()
+        self.progress.append({"task": "gc", "id": tid, "op": "plan",
+                              "retention": retention_fulls,
+                              "doomed": [list(d) for d in doomed]})
+        self._crash("gc:marked")
+        self._gc_sweep(tid, doomed, retention_fulls, 0)
+
+    def _gc_sweep(self, tid: int, doomed: List[Tuple[str, str]],
+                  retention_fulls: Optional[int], pos: int) -> None:
+        hook = ((lambda point, key: self._crash(point))
+                if self.crash_hook is not None else None)
+        while pos < len(doomed):
+            chunk = doomed[pos:pos + self.gc_slice]
+            removed = self.store.gc_apply(chunk, retention_fulls,
+                                          crash_hook=hook)
+            self.gc_swept += sum(removed.values())
+            pos += len(chunk)
+            self._crash("gc:swept_slice")
+            self.progress.append({"task": "gc", "id": tid,
+                                  "op": "cursor", "pos": pos})
+            self._crash("gc:cursored")
+        self.progress.append({"task": "gc", "id": tid, "op": "done"})
+        self.progress.compact_if_idle()
+        self.gc_runs += 1
+
+    # ------------------------------------------------------------------
+    # integrity scrub: journaled walk over cold blobs
+    # ------------------------------------------------------------------
+    def _run_scrub(self) -> None:
+        entries = self.store.scrub_targets()
+        tid = self.progress.next_id()
+        self.progress.append({"task": "scrub", "id": tid, "op": "plan",
+                              "entries": [list(e) for e in entries]})
+        self._crash("scrub:planned")
+        self._scrub_sweep(tid, entries, 0)
+
+    def _scrub_sweep(self, tid: int, entries: List[Tuple[str, str]],
+                     pos: int) -> None:
+        while pos < len(entries):
+            for kind, key in entries[pos:pos + self.scrub_slice]:
+                try:
+                    reason = self.store.backend.verify(key)
+                except FileNotFoundError:
+                    continue  # GC'd or pruned since the plan — fine
+                except (RetryExhaustedError, TransientStoreError):
+                    # flaky infrastructure, not corruption: skip the
+                    # blob, the next periodic scrub retries it — a
+                    # transient must never poison the worker (every
+                    # later flush() would fail on an intact store)
+                    self.scrub_transient_skips += 1
+                    continue
+                self.scrubbed += 1
+                if reason is not None:
+                    if self.store.quarantine(kind, key, reason):
+                        self.corrupt_found += 1
+            pos = min(pos + self.scrub_slice, len(entries))
+            self._crash("scrub:swept_slice")
+            self.progress.append({"task": "scrub", "id": tid,
+                                  "op": "cursor", "pos": pos})
+            self._crash("scrub:cursored")
+        try:
+            self.orphans_swept += self.store.backend.sweep_orphans(
+                self.orphan_min_age_s)
+        except (RetryExhaustedError, TransientStoreError):
+            self.scrub_transient_skips += 1  # orphans wait for next pass
+        self.progress.append({"task": "scrub", "id": tid, "op": "done"})
+        self.progress.compact_if_idle()
+        self.scrub_runs += 1
+        self._last_scrub = time.monotonic()
+
+    # ------------------------------------------------------------------
+    # journal-segment merge
+    # ------------------------------------------------------------------
+    def _run_merge(self) -> None:
+        tid = self.progress.next_id()
+        self.progress.append({"task": "merge", "id": tid, "op": "plan"})
+        self._crash("merge:planned")
+        self._merge_step(tid)
+
+    def _merge_step(self, tid: int) -> None:
+        self.store.merge_journal()
+        self.progress.append({"task": "merge", "id": tid, "op": "done"})
+        self.progress.compact_if_idle()
+        self.merge_runs += 1
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        with self._cv:
+            pending = self._pending
+        return {"running": self.running, "pending": pending,
+                "gc_runs": self.gc_runs, "gc_swept": self.gc_swept,
+                "scrub_runs": self.scrub_runs, "scrubbed": self.scrubbed,
+                "scrub_transient_skips": self.scrub_transient_skips,
+                "corrupt_found": self.corrupt_found,
+                "orphans_swept": self.orphans_swept,
+                "merge_runs": self.merge_runs, "resumed": self.resumed,
+                "error": repr(self.error) if self.error else None,
+                "progress": self.progress.stats()}
