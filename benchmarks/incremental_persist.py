@@ -1,0 +1,131 @@
+"""Exp. 14: incremental-merging persistence engine.
+
+Four measurements on a synthetic sparse-update workload (20 leaves,
+~15% dirty per persist interval — the regime Check-N-Run reports for
+embedding-heavy training):
+
+* **bytes written per persist** — full replica rewrite vs dirty-leaf
+  patch blobs. The headline number: incremental persistence must write
+  >= 5x fewer bytes when <= 20% of leaves are dirty (CI asserts this
+  from the smoke artifact).
+* **persist latency** — wall time of ``save_full`` vs ``save_patch``
+  on the persist thread.
+* **consumer-thread stall** — time the replica lock is held for the
+  persist snapshot: O(model) deep copy vs dirty-leaves-only copy.
+* **recovery time vs patch-chain length** — ``load_latest_state`` with
+  0 / 8 / 16 outstanding patches, and again after the background fold
+  consolidates the chain back to one frame read.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint import make_store
+from repro.core.lowdiff_plus import _NumpyAdam
+
+N_LEAVES = 20
+LEAF = 16384              # 64 KiB per leaf (fp32)
+HOT = [f"w{i}" for i in range(3)]   # 3 of 20 leaves dirty per interval
+PERSISTS = 4
+
+
+def make_replica(track):
+    rng = np.random.default_rng(0)
+    params = {f"w{i}": (0.1 * rng.standard_normal(LEAF)).astype(np.float32)
+              for i in range(N_LEAVES)}
+    mu = {k: np.zeros_like(v) for k, v in params.items()}
+    nu = {k: np.zeros_like(v) for k, v in params.items()}
+    return _NumpyAdam(params, mu, nu, 0, lr=1e-3, track_dirty=track)
+
+
+def sparse_grads(rep, seed):
+    rng = np.random.default_rng(seed)
+    return {k: (rng.standard_normal(v.shape).astype(np.float32)
+                if k in HOT else np.zeros_like(v))
+            for k, v in rep.params.items()}
+
+
+def bench_bytes_and_latency(out, tmp):
+    full_store = make_store(f"{tmp}/full")
+    rep = make_replica(track=False)
+    t_full, stall_full = [], []
+    for step in range(1, PERSISTS + 1):
+        rep.apply(sparse_grads(rep, step))
+        t0 = time.perf_counter()
+        snap = rep.snapshot_full()
+        stall_full.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        full_store.save_full(step, snap)
+        t_full.append(time.perf_counter() - t1)
+    full_bytes = full_store.bytes_written / PERSISTS
+    full_store.close()
+
+    incr_store = make_store(f"{tmp}/incr")
+    rep = make_replica(track=True)
+    rep.apply(sparse_grads(rep, 0))
+    base = incr_store.save_full(1, rep.snapshot_full(), record_names=True)
+    base_bytes = incr_store.bytes_written
+    t_incr, stall_incr = [], []
+    for step in range(2, PERSISTS + 2):
+        rep.apply(sparse_grads(rep, step))
+        t0 = time.perf_counter()
+        updates, _ = rep.snapshot_dirty()
+        stall_incr.append(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        incr_store.save_patch(step, base, updates)
+        t_incr.append(time.perf_counter() - t1)
+    patch_bytes = (incr_store.bytes_written - base_bytes) / PERSISTS
+    incr_store.close()
+
+    ratio = full_bytes / max(patch_bytes, 1.0)
+    out(row("exp14_full_persist_bytes", 0.0, f"{full_bytes / 1e6:.2f}MB"))
+    out(row("exp14_incr_persist_bytes", 0.0, f"{patch_bytes / 1e6:.3f}MB"))
+    out(row("exp14_bytes_ratio_full_over_incr", 0.0, f"x{ratio:.1f}"))
+    out(row("exp14_full_persist_latency", float(np.median(t_full))))
+    out(row("exp14_incr_persist_latency", float(np.median(t_incr))))
+    out(row("exp14_full_snapshot_stall", float(np.median(stall_full))))
+    out(row("exp14_incr_snapshot_stall", float(np.median(stall_incr))))
+    return ratio
+
+
+def bench_recovery(out, tmp):
+    for chain in (0, 8, 16):
+        store = make_store(f"{tmp}/rec_{chain}")
+        rep = make_replica(track=True)
+        rep.apply(sparse_grads(rep, 0))
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        for step in range(2, chain + 2):
+            rep.apply(sparse_grads(rep, step))
+            updates, _ = rep.snapshot_dirty()
+            store.save_patch(step, base, updates)
+        t = timeit(lambda s=store: s.load_latest_state(), warmup=1, iters=3)
+        out(row(f"exp14_recovery_chain_{chain:02d}", t))
+        if chain == 16:
+            store.fold_sync(merge_slice=8)
+            t = timeit(lambda s=store: s.load_latest_state(),
+                       warmup=1, iters=3)
+            out(row("exp14_recovery_after_fold", t,
+                    "chain folded to one frame read"))
+        store.close()
+
+
+def main(out=print):
+    tmp = tempfile.mkdtemp(prefix="exp14_")
+    try:
+        ratio = bench_bytes_and_latency(out, tmp)
+        bench_recovery(out, tmp)
+        if ratio < 5.0:
+            raise AssertionError(
+                f"incremental persist regression: only {ratio:.1f}x fewer "
+                f"bytes than full persistence (acceptance bar: 5x)")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

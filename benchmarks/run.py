@@ -31,6 +31,7 @@ MODULES = [
     ("exp11_remote_tier", "benchmarks.remote_tier"),
     ("exp12_serialization", "benchmarks.serialization"),
     ("exp13_maintenance", "benchmarks.maintenance"),
+    ("exp14_incremental_persist", "benchmarks.incremental_persist"),
 ]
 
 

@@ -70,6 +70,19 @@ class StorageBackend(abc.ABC):
         """Human-readable locator for manifest entries / logs."""
         return f"{self.name}://{key}"
 
+    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
+        """In-place partial update of a stored frame blob: overwrite the
+        named payload leaves (``a0..aN``, same dtype/shape — the layout
+        never moves) at their recorded offsets and refresh the header
+        checksums, instead of re-writing the whole blob. The
+        incremental-merging persistence engine's fold step calls this
+        with exactly the leaves a patch chain dirtied, so fold I/O is
+        O(changed bytes), not O(model). Returns bytes written. Backends
+        that cannot patch raise ``NotImplementedError``; npz blobs are
+        rejected with ``ValueError`` (zip members cannot be pwritten)."""
+        raise NotImplementedError(
+            f"{self.name} backend cannot patch blobs in place")
+
     def protect(self, keys) -> None:
         """Advise the backend that ``keys`` form the newest full
         checkpoint's replay chain: a capacity-bounded tier must never
@@ -169,6 +182,16 @@ class LocalFSBackend(StorageBackend):
         if path is None:
             raise FileNotFoundError(f"no blob {key!r} in {self.root}")
         return cio.load_any(path, mmap=self.mmap_reads)
+
+    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
+        path = self._find(key)
+        if path is None:
+            raise FileNotFoundError(f"no blob {key!r} in {self.root}")
+        if not cio.is_frame_file(path):
+            raise ValueError(
+                f"cannot patch npz blob {key!r} in place; incremental "
+                f"persistence requires the frame format")
+        return cio.patch_frame(path, updates)
 
     def delete(self, key: str) -> None:
         for fmt in self.SUFFIXES:
@@ -427,6 +450,54 @@ class MemoryTierBackend(StorageBackend):
                 fut.result()
             return self.lower.get(key)
         raise FileNotFoundError(f"memory tier has no blob {key!r}")
+
+    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
+        """Patch the resident packed arrays in place (the tier must
+        still own its bytes, so the new leaves are copied) and forward
+        the patch to the lower tier through the same FIFO write-back
+        worker — it lands strictly after the base blob's own
+        write-back, so the tiers never diverge."""
+        self._prune_done()
+        n = 0
+        with self._lock:
+            item = self._mem.get(key)
+            if item is not None:
+                _, arrays, _ = item
+                for name, arr in updates.items():
+                    i = int(name[1:])
+                    a = np.asarray(arr)
+                    if (arrays[i].dtype != a.dtype
+                            or arrays[i].shape != a.shape):
+                        raise ValueError(
+                            f"leaf {name!r} layout mismatch on {key!r}: "
+                            f"{a.dtype}{a.shape} != "
+                            f"{arrays[i].dtype}{arrays[i].shape}")
+                    arrays[i] = np.array(a)
+                    n += int(a.nbytes)
+        if item is None and self.lower is None:
+            raise FileNotFoundError(f"memory tier has no blob {key!r}")
+        if self._writeback is not None:
+            snap = {name: np.array(np.asarray(v))
+                    for name, v in updates.items()}
+            # replacing a still-pending future for this key would lose
+            # its eventual error (patches, unlike re-puts, are not
+            # self-healing): collect the predecessor's outcome inside
+            # the new task — the single FIFO worker guarantees it has
+            # finished by then, so exception() never blocks
+            prev = self._inflight.get(key)
+
+            def run(prev=prev, snap=snap):
+                if prev is not None:
+                    err = prev.exception()
+                    if err is not None:
+                        self._wb_errors.append((key, err))
+                return self.lower.patch(key, snap)
+
+            self._inflight[key] = self._writeback.submit(run)
+            self.spills += 1
+            if item is None:
+                n = sum(int(a.nbytes) for a in snap.values())
+        return n
 
     def delete(self, key: str) -> None:
         fut = self._inflight.pop(key, None)
@@ -713,6 +784,41 @@ class ShardedBackend(StorageBackend):
                           if name in shard_data[k]]
                 arrays.append(np.concatenate(pieces, axis=pl["axis"]))
         return cio.unpack(meta["struct"], arrays)
+
+    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
+        """Patch a sharded blob leaf-wise: split each updated leaf
+        exactly as ``put`` placed it (same axis, same ``array_split``)
+        and pwrite the pieces into their shard frames concurrently.
+        The meta file never changes — placements and sizes are
+        invariant under an in-place patch."""
+        try:
+            with open(self._meta_path(key), encoding="utf-8") as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            raise FileNotFoundError(f"no sharded blob {key!r} in {self.root}")
+        if meta.get("format", "npz") != "frame":
+            raise ValueError(
+                f"cannot patch npz shards of {key!r} in place; "
+                f"incremental persistence requires the frame format")
+        per_shard: Dict[int, Dict[str, np.ndarray]] = {}
+        for name, arr in updates.items():
+            i = int(name[1:])
+            pl = meta["placements"][i]
+            a = np.asarray(arr)
+            if pl["kind"] == "whole":
+                per_shard.setdefault(pl["shard"], {})[name] = a
+            else:
+                pieces = np.array_split(a, meta["num_shards"],
+                                        axis=pl["axis"])
+                for k, piece in enumerate(pieces):
+                    per_shard.setdefault(k, {})[name] = piece
+        futs = {k: self._pool.submit(self._patch_shard, k, key, upd)
+                for k, upd in per_shard.items()}
+        return sum(f.result() for f in futs.values())
+
+    def _patch_shard(self, k: int, key: str,
+                     updates: Dict[str, np.ndarray]) -> int:
+        return cio.patch_frame(self._find_shard(k, key), updates)
 
     def delete(self, key: str) -> None:
         try:

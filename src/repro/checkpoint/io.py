@@ -454,6 +454,100 @@ def frame_dumps(obj: Any) -> bytes:
     return bytes(out)
 
 
+#: test seam: callable(point: str) fired at named points inside
+#: :func:`patch_frame` — "patch:mid_data" (after the first leaf pwrite,
+#: before the rest), "patch:pre_header" (data fsync'd, header still
+#: old) and "patch:mid_header" (half the header bytes rewritten).
+#: Raising from the hook simulates a kill at exactly that point.
+_PATCH_CRASH_HOOK = None
+
+
+def set_patch_crash_hook(hook) -> None:
+    global _PATCH_CRASH_HOOK
+    _PATCH_CRASH_HOOK = hook
+
+
+def patch_frame(path: str, updates: Dict[str, np.ndarray]) -> int:
+    """In-place partial rewrite of a frame file: overwrite the named
+    leaves' buffers at their recorded offsets (dtype/shape/nbytes must
+    match — the layout never moves), then rewrite the header with the
+    new sha256s. Write order is the crash-consistency contract:
+
+    1. leaf buffers are pwritten and fsync'd *first*;
+    2. the header (same byte length — a sha256 hex digest is fixed
+       width) is rewritten *last*.
+
+    A crash at any point leaves a frame whose patched leaves may hold
+    torn bytes or stale digests — which is why callers journal each
+    patch as a durable blob *before* folding it in: recovery replays
+    the patch chain over the base, overwriting exactly the leaves a
+    partial patch could have torn. Returns bytes written."""
+    hook = _PATCH_CRASH_HOOK
+    magic_len = len(FRAME_MAGIC)
+    with open(path, "r+b") as f:
+        head = f.read(magic_len + 8)
+        if len(head) < magic_len + 8 or head[:magic_len] != FRAME_MAGIC:
+            raise FrameCorruptionError(
+                f"{path}: not a frame (bad magic); only frame files can "
+                f"be patched in place")
+        (hlen,) = _struct.unpack("<Q", head[magic_len:magic_len + 8])
+        try:
+            header = json.loads(f.read(hlen).decode("utf-8"))
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise FrameCorruptionError(f"{path}: header parse failed") from e
+        pre = magic_len + 8 + hlen
+        data_start = pre + (-pre) % FRAME_ALIGN
+        by_name = {leaf["name"]: leaf for leaf in header["leaves"]}
+        written = 0
+        fired_mid = False
+        for name in sorted(updates):
+            rec = by_name.get(name)
+            if rec is None:
+                raise ValueError(f"{path}: frame has no leaf {name!r}")
+            a = np.asarray(updates[name])
+            if a.dtype.str != rec["dtype"] or list(a.shape) != rec["shape"]:
+                raise ValueError(
+                    f"{path}: leaf {name!r} layout mismatch "
+                    f"({a.dtype.str}{a.shape} != "
+                    f"{rec['dtype']}{tuple(rec['shape'])}); in-place "
+                    f"patching never moves the frame layout")
+            a = a if a.flags.c_contiguous else np.ascontiguousarray(a)
+            view = _byte_view(a)
+            f.seek(data_start + rec["offset"])
+            f.write(view)
+            rec["sha256"] = hashlib.sha256(view).hexdigest()
+            written += int(a.nbytes)
+            if hook is not None and not fired_mid:
+                fired_mid = True
+                f.flush()
+                os.fsync(f.fileno())
+                hook("patch:mid_data")
+        # data durable before the header points at it
+        f.flush()
+        os.fsync(f.fileno())
+        hjson = json.dumps(header).encode("utf-8")
+        if len(hjson) != hlen:
+            # cannot happen for headers this module wrote (fixed-width
+            # digests, round-trip-stable json) — refuse rather than
+            # shift the data section
+            raise ValueError(f"{path}: patched header length diverged "
+                             f"({len(hjson)} != {hlen}); frame is not "
+                             f"patchable in place")
+        if hook is not None:
+            hook("patch:pre_header")
+        mid = hlen // 2
+        f.seek(magic_len + 8)
+        f.write(hjson[:mid])
+        if hook is not None:
+            f.flush()
+            os.fsync(f.fileno())
+            hook("patch:mid_header")
+        f.write(hjson[mid:])
+        f.flush()
+        os.fsync(f.fileno())
+    return written + hlen
+
+
 def _parse_frame(buf: np.ndarray, *, verify: bool,
                  source: str) -> Tuple[dict, Dict[str, np.ndarray]]:
     """buf: flat uint8 array (np.memmap or np.frombuffer) of the whole

@@ -15,6 +15,8 @@ Records::
 
     {"seq": 7, "op": "add", "kind": "fulls",  "entry": {...}}
     {"seq": 8, "op": "del", "kind": "batches", "key": "batch_..."}
+    {"seq": 9, "op": "replace", "kind": "fulls", "key": "full_...",
+     "entry": {...}}   # atomic del+add (entry rewrites, e.g. the fold)
 
 Recovery reads the snapshot, then replays log records with
 ``seq > snapshot.__seq__``. A torn tail (partial last line from a
@@ -525,5 +527,13 @@ def _apply(manifest: Dict[str, List[dict]], op: str, kind: str,
         manifest[kind].append(entry)
     elif op == "del":
         manifest[kind] = [e for e in manifest[kind] if _entry_key(e) != key]
+    elif op == "replace":
+        # atomic del-by-key + add in ONE journal record: an entry
+        # rewrite (e.g. the fold advancing a full's state_step) must
+        # never have a crash window in which the key exists in neither
+        # form — a torn tail drops the whole record, leaving the old
+        # entry intact
+        manifest[kind] = ([e for e in manifest[kind]
+                           if _entry_key(e) != key] + [entry])
     else:
         raise ValueError(f"unknown journal op {op!r}")

@@ -34,9 +34,12 @@ import hashlib
 import json
 import os
 import random
+import struct as _struct
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import StorageBackend
@@ -323,6 +326,7 @@ class RemoteObjectBackend(StorageBackend):
         self._active_puts: set = set()
         self.puts = 0
         self.gets = 0
+        self.patches = 0
         self.retries = 0
         self.checksum_failures = 0
         self.bytes_up = 0
@@ -412,21 +416,146 @@ class RemoteObjectBackend(StorageBackend):
             # only a re-put leaves a superseded generation; first writes
             # (every step-named key, i.e. nearly all of them) skip the
             # listing entirely
-            self._sweep_stale(key, gen)
+            self._sweep_stale(key, {c["name"] for c in index["chunks"]})
         return nbytes
 
-    def _sweep_stale(self, key: str, live_gen: str) -> None:
-        """Best-effort GC of chunks from superseded generations (and
-        from crashed uploads that never committed). Failures are
-        harmless: orphans cost bucket bytes, never correctness."""
-        keep = f"{key}/{live_gen}."
+    def _sweep_stale(self, key: str, live_names: set) -> None:
+        """Best-effort GC of chunk objects the live index no longer
+        references: superseded generations and crashed uploads. Liveness
+        is the index's chunk *name list*, not a generation prefix — a
+        patched index legitimately mixes generations, reusing unchanged
+        chunks from older ones. Failures are harmless: orphans cost
+        bucket bytes, never correctness."""
         for name in self.store.list_objects(f"{key}/"):
-            if name == self._index_name(key) or name.startswith(keep):
+            if name == self._index_name(key) or name in live_names:
                 continue
             try:
                 self.store.delete_object(name)
             except TransientStoreError:
                 pass
+
+    # ------------------------------------------------------------------
+    # in-place patching (incremental-merging persistence)
+    # ------------------------------------------------------------------
+    def _read_frame_header(self, chunks: List[dict]
+                           ) -> Tuple[dict, int, int, Dict[int, bytes]]:
+        """Fetch just enough leading chunks to parse the frame header.
+        Returns (header dict, header json byte length, data_start,
+        fetched chunk bytes by index — the caller splices into these
+        same chunks, so re-downloading them would double the traffic)."""
+        magic_len = len(cio.FRAME_MAGIC)
+        head = bytearray()
+        fetched: Dict[int, bytes] = {}
+        ci = 0
+        need = magic_len + 8
+        hlen = 0
+        while True:
+            if len(head) >= magic_len + 8:
+                (hlen,) = _struct.unpack(
+                    "<Q", bytes(head[magic_len:magic_len + 8]))
+                need = magic_len + 8 + hlen
+                if len(head) >= need:
+                    break
+            if ci >= len(chunks):
+                raise cio.FrameCorruptionError(
+                    "remote frame shorter than its header")
+            fetched[ci] = self._fetch_chunk(chunks[ci])
+            head += fetched[ci]
+            ci += 1
+        if bytes(head[:magic_len]) != cio.FRAME_MAGIC:
+            raise cio.FrameCorruptionError(
+                "remote blob is not a frame (bad magic)")
+        header = json.loads(bytes(head[magic_len + 8:need]).decode("utf-8"))
+        return header, hlen, need + (-need) % cio.FRAME_ALIGN, fetched
+
+    def patch(self, key: str, updates: Dict[str, Any]) -> int:
+        with self._lock:
+            self._active_puts.add(key)
+        try:
+            return self._patch(key, updates)
+        finally:
+            with self._lock:
+                self._active_puts.discard(key)
+
+    def _patch(self, key: str, updates: Dict[str, Any]) -> int:
+        """Re-put only the chunk objects a dirty leaf's byte range (or
+        the rewritten header) intersects, under a fresh generation; the
+        new index references the new chunks *and* every untouched chunk
+        of the previous generation by name — unchanged bytes are never
+        re-uploaded. The index write is the commit point, exactly as in
+        ``put``: a crash mid-patch leaves the old index live and only
+        orphan chunks behind."""
+        index = self._load_index(key)
+        if index.get("format", "npz") != "frame":
+            raise ValueError(
+                f"cannot patch npz remote blob {key!r} in place; "
+                f"incremental persistence requires the frame format")
+        chunks = list(index["chunks"])
+        header, hlen, data_start, fetched = self._read_frame_header(chunks)
+        bytes_down = sum(len(b) for b in fetched.values())
+        by_name = {leaf["name"]: leaf for leaf in header["leaves"]}
+        magic_len = len(cio.FRAME_MAGIC)
+        # dirty byte ranges: each updated leaf, plus the header rewrite
+        ranges: List[Tuple[int, bytes]] = []
+        for name in sorted(updates):
+            rec = by_name.get(name)
+            if rec is None:
+                raise ValueError(f"remote frame {key!r} has no leaf {name!r}")
+            a = np.asarray(updates[name])
+            if a.dtype.str != rec["dtype"] or list(a.shape) != rec["shape"]:
+                raise ValueError(
+                    f"leaf {name!r} layout mismatch on {key!r}: "
+                    f"{a.dtype.str}{a.shape} != "
+                    f"{rec['dtype']}{tuple(rec['shape'])}")
+            raw = np.ascontiguousarray(a).tobytes()
+            rec["sha256"] = _sha256(raw)
+            ranges.append((data_start + rec["offset"], raw))
+        hjson = json.dumps(header).encode("utf-8")
+        if len(hjson) != hlen:
+            raise ValueError(f"patched header for {key!r} length diverged "
+                             f"({len(hjson)} != {hlen})")
+        ranges.append((magic_len + 8, hjson))
+        gen = os.urandom(4).hex()
+        new_chunks: List[dict] = []
+        nbytes_up = 0
+        lo = 0
+        for i, c in enumerate(chunks):
+            hi = lo + int(c["size"])
+            touching = [(o, b) for o, b in ranges
+                        if o < hi and o + len(b) > lo]
+            if not touching:
+                new_chunks.append(c)          # reuse by name: not re-put
+            else:
+                old = fetched.get(i)
+                if old is None:
+                    old = self._fetch_chunk(c)
+                    bytes_down += len(old)
+                data = bytearray(old)
+                for o, b in touching:
+                    s, e = max(lo, o), min(hi, o + len(b))
+                    data[s - lo:e - lo] = b[s - o:e - o]
+                blob = bytes(data)
+                name = self._chunk_name(key, gen, i)
+                self._with_retries(
+                    lambda n=name, d=blob: self.store.put_object(n, d),
+                    f"put {name}")
+                new_chunks.append({"name": name, "sha256": _sha256(blob),
+                                   "size": len(blob)})
+                nbytes_up += len(blob)
+            lo = hi
+        new_index = {"gen": gen, "format": "frame", "chunks": new_chunks,
+                     "nbytes": index["nbytes"]}
+        index_bytes = json.dumps(new_index).encode()
+        self._with_retries(
+            lambda: self.store.put_object(self._index_name(key), index_bytes),
+            f"put {self._index_name(key)}")
+        self._count("patches")
+        self._count("bytes_up", nbytes_up + len(index_bytes))
+        self._count("bytes_down", bytes_down)
+        with self._lock:
+            self._live_gens[key] = gen
+        self._sweep_stale(key, {c["name"] for c in new_chunks})
+        return nbytes_up + len(index_bytes)
 
     def _load_index(self, key: str) -> dict:
         def fetch():
@@ -518,13 +647,16 @@ class RemoteObjectBackend(StorageBackend):
             if key in active:
                 continue
             try:
-                live = f"{key}/{self._load_index(key)['gen']}."
+                # liveness = the names the index references (a patched
+                # index mixes generations), not a generation prefix
+                live = {c["name"]
+                        for c in self._load_index(key)["chunks"]}
             except FileNotFoundError:
                 live = None              # no commit point: all orphans
             except (RetryExhaustedError, TransientStoreError):
                 continue                 # unreadable index: leave alone
             for name in names:
-                if live is not None and name.startswith(live):
+                if live is not None and name in live:
                     continue
                 try:
                     self.store.delete_object(name)
@@ -561,7 +693,7 @@ class RemoteObjectBackend(StorageBackend):
             return {"backend": self.name, "scheme": self.store.scheme,
                     "chunk_bytes": self.chunk_bytes,
                     "puts": self.puts, "gets": self.gets,
-                    "retries": self.retries,
+                    "patches": self.patches, "retries": self.retries,
                     "checksum_failures": self.checksum_failures,
                     "bytes_up": self.bytes_up,
                     "bytes_down": self.bytes_down}

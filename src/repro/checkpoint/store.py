@@ -12,6 +12,22 @@ Keys (backend-independent)::
     full_00000010                # model state M_t
     diff_00000011                # one differential (G̃_t)
     batch_00000012_00000015      # batched differentials
+    patch_00000013               # incremental persist: dirty leaves only
+
+The ``patches`` kind is the incremental-merging persistence engine
+(LowDiff+ §VI): each patch blob holds just the leaves that changed
+since the previous persist, against a ``base`` full whose manifest
+entry records the path -> frame-leaf-name map. Recovery loads the base
+and overlays the ordered patch chain (:meth:`load_latest_state`); the
+background fold (:meth:`fold_plan` / :meth:`fold_updates` /
+:meth:`fold_slice` / :meth:`fold_commit`, driven by the maintenance
+service) pwrites the accumulated dirty leaves into the base frame in
+place (``StorageBackend.patch``) and retires the chain, so
+``load_full`` stays one frame read and the chain never grows
+unboundedly. Crash consistency: a patch blob is durable and journaled
+*before* any in-place fold touches the base, so recovery after a kill
+at any fold point replays the chain over the base and lands
+bit-identical on the last committed persist.
 
 Chain-aware garbage collection (`gc`) deletes full checkpoints and
 differential blobs superseded by a newer full, keeping
@@ -31,9 +47,60 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
+from repro.checkpoint import io as cio
 from repro.checkpoint.backends import LocalFSBackend, StorageBackend
 from repro.checkpoint.journal import (ManifestJournal, MemoryJournal,
                                       SegmentedManifestJournal, _entry_key)
+
+#: manifest kinds that reference a backend blob (chain entries)
+CHAIN_KINDS = ("fulls", "diffs", "batches", "patches")
+
+
+def walk_leaves(tree, prefix: str = ""):
+    """Yield ``(path, leaf)`` for every array leaf of a nested
+    dict/list/tuple state, depth-first in insertion order — the same
+    traversal :func:`repro.checkpoint.io.pack` uses, so paths line up
+    1:1 with frame payload names."""
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from walk_leaves(v, f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from walk_leaves(v, f"{prefix}{i}/")
+    else:
+        yield prefix[:-1], tree
+
+
+def payload_names(state) -> Dict[str, str]:
+    """Map each array leaf's path to its frame payload name (``aN``).
+
+    Uses array identity: ``pack`` appends ``np.asarray(leaf)`` — the
+    *same object* for ndarray leaves — so matching ids recovers exactly
+    the name each leaf serializes under, with no assumption about
+    pack's traversal order. Non-array leaves (python scalars live in
+    the struct, not the data section) are skipped: they cannot be
+    patched in place."""
+    _, arrays = cio.pack(state)
+    by_id = {id(a): f"a{i}" for i, a in enumerate(arrays)}
+    names = {}
+    for path, leaf in walk_leaves(state):
+        if isinstance(leaf, np.ndarray):
+            name = by_id.get(id(leaf))
+            if name is not None:
+                names[path] = name
+    return names
+
+
+def merge_updates(state, updates) -> None:
+    """Overlay a patch blob's partial state dict onto ``state`` in
+    place (leaf-wise; nested dicts merge, anything else replaces)."""
+    for k, v in updates.items():
+        if isinstance(v, dict) and isinstance(state.get(k), dict):
+            merge_updates(state[k], v)
+        else:
+            state[k] = v
 
 
 class CheckpointStore:
@@ -67,6 +134,9 @@ class CheckpointStore:
         self.writes = 0
         self.gc_deleted = 0
         self.quarantined = 0
+        self.folds = 0
+        self.fold_bytes = 0
+        self.folded_patches = 0
         self._prune_missing()
         self._update_protected()
 
@@ -86,17 +156,46 @@ class CheckpointStore:
             self.writes += 1
 
     # ------------------------------------------------------------------
-    def save_full(self, step: int, state) -> str:
+    def save_full(self, step: int, state, *, record_names: bool = False)\
+            -> str:
         key = f"full_{step:08d}"
         # pre-protect: eviction runs inside put(), before the journal
         # records the entry — the incoming blob must already be exempt
         self._update_protected(extra={key})
         n = self.backend.put(key, state)
-        self._record("fulls", {"step": step, "key": key,
-                               "path": self.backend.url(key), "bytes": n}, n)
+        entry = {"step": step, "key": key,
+                 "path": self.backend.url(key), "bytes": n}
+        if record_names:
+            # path -> frame leaf name map: what lets a later patch chain
+            # address this full's leaves for the in-place fold
+            entry["names"] = payload_names(state)
+        self._record("fulls", entry, n)
         self._update_protected()
         if self.retention_fulls:
             self.request_gc()
+        return key
+
+    def save_patch(self, step: int, base_key: str, updates) -> str:
+        """Persist only the leaves that changed since the last persist,
+        as a durable patch blob chained onto ``base_key`` — the
+        incremental-merging persistence write path. ``updates`` is a
+        partial state dict (same nesting as the base full, dirty leaves
+        only). The blob lands and is journaled *before* any in-place
+        fold touches the base frame, so it doubles as the fold's
+        write-ahead log."""
+        if getattr(self.backend, "fmt", "npz") == "npz":
+            raise ValueError(
+                "incremental persistence (save_patch) requires the "
+                "frame checkpoint format; this store writes npz — use "
+                "--format frame or --persist-mode full")
+        key = f"patch_{step:08d}"
+        self._update_protected(extra={key})
+        n = self.backend.put(key, {"base": base_key, "step": step,
+                                   "updates": updates})
+        self._record("patches", {"step": step, "key": key, "base": base_key,
+                                 "path": self.backend.url(key),
+                                 "bytes": n}, n)
+        self._update_protected()
         return key
 
     def save_diff(self, step: int, payload) -> str:
@@ -149,6 +248,9 @@ class CheckpointStore:
                 keys.update(self._entry_key(e)
                             for e in self.manifest["batches"]
                             if e["last"] > cutoff)
+                keys.update(self._entry_key(e)
+                            for e in self.manifest.get("patches", [])
+                            if e["step"] > cutoff)
             self.backend.protect(keys)
 
     # ------------------------------------------------------------------
@@ -163,8 +265,8 @@ class CheckpointStore:
         suffix of the write order and pruning restores the seed's
         guarantee: recovery always sees a consistent chain prefix."""
         with self._lock:
-            for kind in ("fulls", "diffs", "batches"):
-                for e in list(self.manifest[kind]):
+            for kind in CHAIN_KINDS:
+                for e in list(self.manifest.get(kind, [])):
                     key = self._entry_key(e)
                     if not self.backend.exists(key):
                         self.journal.append("del", kind, key=key)
@@ -210,6 +312,179 @@ class CheckpointStore:
         return sorted(out.items())
 
     # ------------------------------------------------------------------
+    # incremental-merging persistence: patch chains + background fold
+    # ------------------------------------------------------------------
+    def patch_chain(self, base_key: str) -> List[dict]:
+        """Ordered patch entries chained onto ``base_key``."""
+        with self._lock:
+            return sorted((e for e in self.manifest.get("patches", [])
+                           if e.get("base") == base_key),
+                          key=lambda e: e["step"])
+
+    def load_latest_state(self):
+        """Newest persisted state: the latest loadable full overlaid
+        with its ordered patch chain. Returns ``(state, step)`` where
+        ``step`` is the last committed persist the state represents
+        (the last patch's step, or the full's folded-through step).
+        Unreadable fulls fall back to older ones (as in
+        ``load_latest_chain``); an unreadable patch cuts the chain at
+        the gap — the prefix is still a committed persist. Raises
+        FileNotFoundError when no full checkpoint is loadable."""
+        from repro.checkpoint.io import FrameCorruptionError
+        from repro.checkpoint.remote import RetryExhaustedError
+        with self._lock:
+            fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"],
+                           reverse=True)
+        if not fulls:
+            raise FileNotFoundError("no persisted checkpoint")
+        last_err = None
+        for entry in fulls:
+            try:
+                state = self.load_full(entry)
+            except (FileNotFoundError, RetryExhaustedError,
+                    FrameCorruptionError) as e:
+                last_err = e
+                continue
+            step = int(entry.get("state_step", entry["step"]))
+            for pe in self.patch_chain(self._entry_key(entry)):
+                try:
+                    blob = self.backend.get(self._entry_key(pe))
+                except (FileNotFoundError, RetryExhaustedError,
+                        FrameCorruptionError):
+                    break            # cut at the gap: prefix is committed
+                merge_updates(state, blob["updates"])
+                step = max(step, int(pe["step"]))
+            return state, step
+        raise FileNotFoundError(
+            f"none of {len(fulls)} full checkpoints is loadable "
+            f"(last error: {last_err})")
+
+    def fold_plan(self):
+        """Mark phase of the incremental merge: ``(base_key,
+        [patch keys in step order], state_step)`` for the newest
+        foldable patch chain, or None when there is nothing to fold.
+        Fulls are considered newest-first, but an *older* full's chain
+        is still foldable — a restart cuts a fresh base and would
+        otherwise orphan the previous chain forever (it remains the
+        recovery fallback if the newest full turns unreadable, and it
+        must stay bounded). Lock-only — no I/O — so the maintenance
+        service can journal the plan before touching storage."""
+        with self._lock:
+            fulls = sorted(self.manifest["fulls"],
+                           key=lambda e: e["step"], reverse=True)
+            for entry in fulls:
+                if "names" not in entry:
+                    continue   # no leaf-name map: frame not addressable
+                base_key = self._entry_key(entry)
+                patches = sorted(
+                    (e for e in self.manifest.get("patches", [])
+                     if e.get("base") == base_key),
+                    key=lambda e: e["step"])
+                if patches:
+                    return (base_key,
+                            [self._entry_key(e) for e in patches],
+                            int(patches[-1]["step"]))
+        return None
+
+    def fold_updates(self, base_key: str, patch_keys: List[str]):
+        """Load the planned patch chain and merge it (later patches
+        win per leaf) into ``{frame leaf name: array}`` ready for
+        ``backend.patch``. Returns None when the chain or its base is
+        gone — superseded or already folded since the plan."""
+        with self._lock:
+            entry = next((e for e in self.manifest["fulls"]
+                          if self._entry_key(e) == base_key), None)
+            names = dict(entry["names"]) if entry and "names" in entry \
+                else None
+        if names is None:
+            return None
+        merged: Dict[str, Any] = {}
+        for key in patch_keys:
+            try:
+                blob = self.backend.get(key)
+            except FileNotFoundError:
+                return None
+            for path, leaf in walk_leaves(blob["updates"]):
+                merged[path] = leaf
+        out = {}
+        for path, leaf in merged.items():
+            name = names.get(path)
+            if name is None:
+                raise KeyError(
+                    f"patch leaf {path!r} is not addressable in base "
+                    f"{base_key!r} (missing from its name map)")
+            out[name] = np.asarray(leaf)
+        return out
+
+    def fold_slice(self, base_key: str, updates) -> int:
+        """Sweep phase, one bounded slice: pwrite these leaves into the
+        base frame in place. Blob I/O only — never under the manifest
+        lock."""
+        n = self.backend.patch(base_key, updates)
+        with self._lock:
+            self.fold_bytes += n
+        return n
+
+    def fold_commit(self, base_key: str, patch_keys: List[str],
+                    state_step: int) -> None:
+        """Retire a fully folded chain: advance the base entry's
+        ``state_step`` (the persist step its bytes now represent)
+        *first*, then delete the patch records and blobs. Idempotent at
+        every boundary — a crash between any two deletions leaves a
+        suffix of the chain, which recovery replays over the folded
+        base to identical bytes."""
+        with self._lock:
+            entry = next((e for e in self.manifest["fulls"]
+                          if self._entry_key(e) == base_key), None)
+            if entry is not None and \
+                    int(entry.get("state_step", entry["step"])) < state_step:
+                e2 = dict(entry)
+                e2["state_step"] = int(state_step)
+                # one atomic journal record: a kill between a del and a
+                # separate re-add would erase the only base full from
+                # the manifest
+                self.journal.append("replace", "fulls", entry=e2,
+                                    key=base_key)
+        for key in patch_keys:
+            with self._lock:
+                self.journal.append("del", "patches", key=key)
+            self.backend.delete(key)
+        with self._lock:
+            self.folds += 1
+            self.folded_patches += len(patch_keys)
+        self._update_protected()
+
+    def fold_sync(self, merge_slice: Optional[int] = None) -> int:
+        """Synchronous fold (the ``--maintenance off`` path and tests):
+        mark, sweep in ``merge_slice``-leaf slices, commit. Returns the
+        number of patches folded."""
+        plan = self.fold_plan()
+        if plan is None:
+            return 0
+        base_key, patch_keys, state_step = plan
+        updates = self.fold_updates(base_key, patch_keys)
+        if updates is None:
+            return 0
+        names = sorted(updates)
+        width = max(1, int(merge_slice)) if merge_slice else len(names) or 1
+        for i in range(0, len(names), width):
+            self.fold_slice(base_key,
+                            {n: updates[n] for n in names[i:i + width]})
+        self.fold_commit(base_key, patch_keys, state_step)
+        return len(patch_keys)
+
+    def request_fold(self) -> None:
+        """Route the incremental merge off the hot path: schedule it on
+        the attached maintenance service (non-blocking, journaled,
+        sliced) or fall back to a synchronous fold. Either way the
+        caller's persist thread never waits for the base rewrite."""
+        svc = self.maintenance
+        if svc is not None and svc.running:
+            svc.request_fold()
+            return
+        self.fold_sync()
+
+    # ------------------------------------------------------------------
     # garbage collection: mark (plan) / sweep (apply)
     # ------------------------------------------------------------------
     def gc_plan(self, retention_fulls: Optional[int] = None
@@ -230,7 +505,9 @@ class CheckpointStore:
             if len(fulls) <= keep:
                 return doomed
             cutoff = fulls[-keep]["step"]
+            doomed_fulls = set()
             for e in fulls[:-keep]:
+                doomed_fulls.add(self._entry_key(e))
                 doomed.append(("fulls", self._entry_key(e)))
             for e in self.manifest["diffs"]:
                 if e["step"] <= cutoff:
@@ -238,6 +515,12 @@ class CheckpointStore:
             for e in self.manifest["batches"]:
                 if e["last"] <= cutoff:
                     doomed.append(("batches", self._entry_key(e)))
+            for e in self.manifest.get("patches", []):
+                # a patch is dead once its base full is (it can only be
+                # replayed over that exact frame) or once a newer
+                # retained full supersedes its step
+                if e["step"] <= cutoff or e.get("base") in doomed_fulls:
+                    doomed.append(("patches", self._entry_key(e)))
         return doomed
 
     def _live_chain_keys(self, keep: int) -> set:
@@ -251,11 +534,16 @@ class CheckpointStore:
             if not retained:
                 return keys
             cutoff = retained[0]["step"]
-            keys.update(self._entry_key(e) for e in retained)
+            retained_keys = {self._entry_key(e) for e in retained}
+            keys.update(retained_keys)
             keys.update(self._entry_key(e) for e in self.manifest["diffs"]
                         if e["step"] > cutoff)
             keys.update(self._entry_key(e) for e in self.manifest["batches"]
                         if e["last"] > cutoff)
+            keys.update(self._entry_key(e)
+                        for e in self.manifest.get("patches", [])
+                        if e["step"] > cutoff
+                        and e.get("base") in retained_keys)
         return keys
 
     def gc_apply(self, doomed: List[Tuple[str, str]],
@@ -316,8 +604,8 @@ class CheckpointStore:
         ``(kind, key)`` — a point-in-time snapshot under the lock."""
         with self._lock:
             return [(kind, self._entry_key(e))
-                    for kind in ("fulls", "diffs", "batches")
-                    for e in self.manifest[kind]]
+                    for kind in CHAIN_KINDS
+                    for e in self.manifest.get(kind, [])]
 
     def merge_journal(self):
         """Fold journal state into its snapshot under the store lock: a
@@ -395,6 +683,9 @@ class CheckpointStore:
                     "fulls": len(self.manifest["fulls"]),
                     "diffs": len(self.manifest["diffs"]),
                     "batches": len(self.manifest["batches"]),
+                    "patches": len(self.manifest.get("patches", [])),
+                    "folds": self.folds, "fold_bytes": self.fold_bytes,
+                    "folded_patches": self.folded_patches,
                     "gc_deleted": self.gc_deleted,
                     "quarantined": len(self.manifest.get("quarantined", [])),
                     "journal": self.journal.stats(),

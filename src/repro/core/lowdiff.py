@@ -47,13 +47,17 @@ class LowDiff:
                  batch_mode: str = "concat", queue_size: int = 4,
                  parallel_recovery: bool = True,
                  error_feedback: bool = True, compressor: str = "topk",
-                 flush_timeout: float = 120.0):
+                 flush_timeout: float = 120.0,
+                 replay_window: Optional[int] = None):
         self.model, self.store = model, store
         self.rho, self.lr = rho, lr
         if compressor == "quant8":
             error_feedback = False
         self.batch_mode = batch_mode
         self.parallel_recovery = parallel_recovery
+        #: bound on differentials per parallel-replay scan window (peak
+        #: replay memory is O(window * model), not O(chain * model))
+        self.replay_window = replay_window
         self.flush_timeout = flush_timeout
         self.tuner = OnlineTuner(sys_params or SystemParams())
         fi, bs = practical_config(self.tuner.p)
@@ -224,9 +228,13 @@ class LowDiff:
         # at the first step gap (a write-back hole) rather than replay
         # across it into silently wrong state
         diffs = rec.contiguous_prefix(int(state["step"]), diffs)
-        replay = (rec.replay_parallel if self.parallel_recovery
-                  else rec.replay_serial)
-        params, opt = replay(state["params"], state["opt"], diffs, lr=self.lr)
+        if self.parallel_recovery:
+            params, opt = rec.replay_parallel(state["params"], state["opt"],
+                                              diffs, lr=self.lr,
+                                              window=self.replay_window)
+        else:
+            params, opt = rec.replay_serial(state["params"], state["opt"],
+                                            diffs, lr=self.lr)
         state["params"], state["opt"] = params, opt
         if diffs:
             state["step"] = np.asarray(diffs[-1][0], np.int32)

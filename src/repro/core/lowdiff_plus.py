@@ -19,6 +19,18 @@ Two mechanisms on top of LowDiff:
 
 Recovery: software failures restore from the in-memory replica
 (near-instant); hardware failures reload the last persisted replica.
+
+**Incremental-merging persistence** (``persist_mode="incremental"``):
+the replica tracks which leaves each Adam apply actually changed, and
+every persist after the first writes a *patch blob* holding only those
+dirty leaves — storage bytes and host copies per persist are
+O(changed bytes), not O(model). An optional ``persist_threshold``
+defers near-converged leaves (accumulated relative L∞ drift below the
+threshold) so they stop being re-persisted until they move enough to
+matter. The checkpoint store journals each patch against its base full
+and a background fold (the maintenance service's incremental merger)
+pwrites accumulated patches into the base frame in place, so recovery
+stays one frame read and the chain never grows unboundedly.
 """
 from __future__ import annotations
 
@@ -38,10 +50,19 @@ from repro.core.steps import make_train_step
 
 
 class _NumpyAdam:
-    """Host-side Adam replica (elementwise; matches repro.optim.adam)."""
+    """Host-side Adam replica (elementwise; matches repro.optim.adam).
+
+    With ``track_dirty`` the replica records, per leaf, whether its
+    bytes diverged from the last persisted snapshot — the dirty set the
+    incremental-merging persistence engine snapshots instead of the
+    whole replica. A leaf whose gradient *and* both moments are all
+    zero is provably unchanged by the step (the update is exactly 0)
+    and is skipped without touching it; every other applied leaf is
+    marked dirty and its accumulated L∞ parameter drift tracked for
+    the optional ``--persist-threshold`` filter."""
 
     def __init__(self, params, mu, nu, count, *, lr, b1=0.9, b2=0.999,
-                 eps=1e-8):
+                 eps=1e-8, track_dirty: bool = False):
         self.params = {k: np.array(v, np.float32) if v.dtype != np.float32
                        else np.array(v) for k, v in params.items()}
         self.dtypes = {k: v.dtype for k, v in params.items()}
@@ -49,6 +70,12 @@ class _NumpyAdam:
         self.nu = {k: np.array(v) for k, v in nu.items()}
         self.count = int(count)
         self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.track_dirty = track_dirty
+        #: leaves whose replica bytes differ from the last snapshot
+        self._dirty = set(self.params)
+        #: accumulated L∞ parameter change since the leaf last persisted
+        self._drift = {k: 0.0 for k in self.params}
+        self.skipped_applies = 0
 
     def apply(self, grads: Dict[str, np.ndarray]):
         self.count += 1
@@ -58,16 +85,73 @@ class _NumpyAdam:
             g = np.asarray(g, np.float32)
             mu = self.mu[k]
             nu = self.nu[k]
+            if self.track_dirty and not (g.any() or mu.any() or nu.any()):
+                # zero gradient onto zero moments: the update is exactly
+                # zero and the moments stay zero — the leaf provably
+                # does not change, so neither math nor dirty-marking runs
+                self.skipped_applies += 1
+                continue
             mu *= self.b1
             mu += (1 - self.b1) * g
             nu *= self.b2
             nu += (1 - self.b2) * g * g
-            self.params[k] -= self.lr * (mu / c1) / (np.sqrt(nu / c2)
-                                                     + self.eps)
+            upd = self.lr * (mu / c1) / (np.sqrt(nu / c2) + self.eps)
+            self.params[k] -= upd
+            if self.track_dirty:
+                self._dirty.add(k)
+                if upd.size:
+                    self._drift[k] += float(np.max(np.abs(upd)))
 
     def state(self):
         return {"params": dict(self.params), "mu": dict(self.mu),
                 "nu": dict(self.nu), "count": self.count}
+
+    # -- persistence snapshots (caller holds the replica lock) ---------
+    def snapshot_full(self):
+        """Copy every leaf for a full persist; the whole replica is
+        the persisted state, so all leaves become clean."""
+        snap = {"params": {k: np.array(v) for k, v in self.params.items()},
+                "mu": {k: np.array(v) for k, v in self.mu.items()},
+                "nu": {k: np.array(v) for k, v in self.nu.items()},
+                "count": np.array(self.count, np.int64)}
+        if self.track_dirty:
+            self._dirty.clear()
+            self._drift = {k: 0.0 for k in self._drift}
+        return snap
+
+    def snapshot_dirty(self, threshold: float = 0.0):
+        """Copy only the dirty leaves (plus the always-advancing Adam
+        count) for an incremental persist. With ``threshold`` > 0 a
+        dirty leaf whose accumulated relative L∞ drift is still below
+        ``threshold`` is *deferred*: it stays dirty and its drift keeps
+        accumulating, so a near-converged leaf stops being re-persisted
+        until it has moved enough to matter. Returns ``(partial state
+        dict, deferred leaf count)``."""
+        updates = {"params": {}, "mu": {}, "nu": {},
+                   "count": np.array(self.count, np.int64)}
+        deferred = 0
+        for k in sorted(self._dirty):
+            if threshold > 0.0:
+                p = self.params[k]
+                scale = float(np.max(np.abs(p))) if p.size else 0.0
+                if self._drift[k] <= threshold * (scale + 1e-12):
+                    deferred += 1
+                    continue
+            updates["params"][k] = np.array(self.params[k])
+            updates["mu"][k] = np.array(self.mu[k])
+            updates["nu"][k] = np.array(self.nu[k])
+            self._dirty.discard(k)
+            self._drift[k] = 0.0
+        return updates, deferred
+
+    def remark_dirty(self, updates) -> None:
+        """Undo a snapshot's clean-marking after its persist *failed*:
+        the leaves it carried never became durable, so they must ride
+        the next persist or every later recovery silently restores
+        stale values for them. Infinite drift defeats any threshold."""
+        for k in updates.get("params", {}):
+            self._dirty.add(k)
+            self._drift[k] = float("inf")
 
 
 def _flatten(tree):
@@ -86,12 +170,29 @@ def _unflatten_like(tree, flat):
 class LowDiffPlus:
     name = "lowdiff_plus"
 
+    PERSIST_MODES = ("full", "incremental")
+
     def __init__(self, model, store: CheckpointStore, *, lr: float = 1e-3,
                  persist_interval: int = 1, snapshot_workers: int = 4,
-                 queue_size: int = 8, flush_timeout: float = 120.0):
+                 queue_size: int = 8, flush_timeout: float = 120.0,
+                 persist_mode: str = "full",
+                 persist_threshold: float = 0.0, fold_interval: int = 16):
+        if persist_mode not in self.PERSIST_MODES:
+            raise ValueError(f"persist_mode must be one of "
+                             f"{self.PERSIST_MODES}")
+        if (persist_mode == "incremental" and store is not None
+                and getattr(store.backend, "fmt", "npz") == "npz"):
+            raise ValueError(
+                "--persist-mode incremental patches checkpoint leaves "
+                "in place, which requires the frame format; this store "
+                "writes npz — use --format frame or --persist-mode full")
         self.model, self.store, self.lr = model, store, lr
         self.persist_interval = persist_interval
         self.flush_timeout = flush_timeout
+        self.persist_mode = persist_mode
+        self.persist_threshold = float(persist_threshold)
+        #: schedule a background fold after this many patches (0 = never)
+        self.fold_interval = int(fold_interval)
         self.step_fn = make_train_step(model, mode="lowdiff_plus", lr=lr)
         self.queue = ReusingQueue(maxsize=queue_size)
         self._snap_pool = ThreadPoolExecutor(max_workers=snapshot_workers,
@@ -109,6 +210,12 @@ class LowDiffPlus:
         self._processed = 0
         self.ckpt_time = 0.0
         self.persists = 0
+        self.patch_persists = 0
+        self.leaves_deferred = 0
+        # incremental-persist chain state: only ever touched on the
+        # consumer / persist threads (single-threaded each, FIFO between)
+        self._base_step: Optional[int] = None
+        self._since_fold = 0
 
     # ------------------------------------------------------------------
     def attach(self, state):
@@ -116,10 +223,12 @@ class LowDiffPlus:
         params = _flatten(state["params"])
         mu = _flatten(state["opt"].mu)
         nu = _flatten(state["opt"].nu)
-        self._replica = _NumpyAdam(host_copy(params), host_copy(mu),
-                                   host_copy(nu), int(state["opt"].count),
-                                   lr=self.lr)
+        self._replica = _NumpyAdam(
+            host_copy(params), host_copy(mu), host_copy(nu),
+            int(state["opt"].count), lr=self.lr,
+            track_dirty=(self.persist_mode == "incremental"))
         self._replica_step = int(state["step"])
+        self._base_step = None
 
     def _start_consumer(self):
         if self.queue.error is not None:
@@ -162,18 +271,51 @@ class LowDiffPlus:
             self._replica.apply(grads)        # in-memory checkpoint update
             self._replica_step = step
         if step % self.persist_interval == 0:
-            snap = {"params": {k: np.array(v) for k, v in
-                               self._replica.params.items()},
-                    "mu": {k: np.array(v) for k, v in self._replica.mu.items()},
-                    "nu": {k: np.array(v) for k, v in self._replica.nu.items()},
-                    "count": self._replica.count}
+            # snapshot under the lock (a concurrent recover_software
+            # must never see a half-copied persist image) but submit
+            # outside it — the lock is held only for the copy, and in
+            # incremental mode the copy is only the *dirty* leaves, not
+            # an O(model) deep copy of the whole replica
+            incremental = (self.persist_mode == "incremental"
+                           and self._base_step is not None)
+            with self._replica_lock:
+                if incremental:
+                    updates, deferred = self._replica.snapshot_dirty(
+                        self.persist_threshold)
+                    self.leaves_deferred += deferred
+                    snap = ("patch", self._base_step, updates)
+                else:
+                    snap = ("full", None, self._replica.snapshot_full())
+            if snap[0] == "full" and self.persist_mode == "incremental":
+                self._base_step = step      # later persists chain on it
             with self._pending_lock:
                 self._pending.append(
                     self._persist_pool.submit(self._persist, step, snap))
         self._processed += 1
 
-    def _persist(self, step: int, payload):
-        self.store.save_full(step, payload)
+    def _persist(self, step: int, snap):
+        kind, base_step, payload = snap
+        if kind == "full":
+            self.store.save_full(
+                step, payload,
+                record_names=(self.persist_mode == "incremental"))
+        else:
+            try:
+                self.store.save_patch(step, f"full_{base_step:08d}", payload)
+            except BaseException:
+                # the dirty bits were cleared at snapshot time; a lost
+                # patch must re-dirty its leaves or no later patch ever
+                # carries them again (an invisible, permanent hole)
+                with self._replica_lock:
+                    self._replica.remark_dirty(payload)
+                raise
+            self.patch_persists += 1
+            self._since_fold += 1
+            if self.fold_interval and self._since_fold >= self.fold_interval:
+                # bound the patch chain: fold it into the base frame off
+                # the hot path (maintenance service when attached)
+                self._since_fold = 0
+                self.store.request_fold()
         self.persists += 1
 
     def flush(self, timeout: Optional[float] = None):
@@ -190,7 +332,10 @@ class LowDiffPlus:
         for f in pending:
             f.result()                  # a failure keeps the rest pending
         with self._pending_lock:
-            self._pending = [f for f in self._pending if f not in pending]
+            # _handle only ever appends, so the futures just waited on
+            # are exactly the list's prefix: drain it by index — O(n)
+            # total — instead of the old O(n²) membership re-scan
+            del self._pending[:len(pending)]
         self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
 
     def close(self):
@@ -225,11 +370,14 @@ class LowDiffPlus:
                 "step": np.asarray(self._replica_step, np.int32)}
 
     def recover_hardware(self, template_state):
-        """Hardware failure: reload the last persisted replica."""
-        entry = self.store.latest_full()
-        if entry is None:
+        """Hardware failure: reload the last persisted replica — the
+        latest full overlaid with its committed patch chain when
+        persisting incrementally (one frame read once the background
+        fold has consolidated it)."""
+        try:
+            blob, step = self.store.load_latest_state()
+        except FileNotFoundError:
             raise FileNotFoundError("no persisted checkpoint")
-        blob = self.store.load_full(entry)
         dtypes = {k: np.asarray(v).dtype
                   for k, v in _flatten(template_state["params"]).items()}
         params = _unflatten_like(
@@ -241,9 +389,15 @@ class LowDiffPlus:
                         _unflatten_like(opt.nu, blob["nu"]),
                         np.asarray(blob["count"], np.int32))
         return {"params": params, "opt": opt,
-                "step": np.asarray(entry["step"], np.int32)}
+                "step": np.asarray(step, np.int32)}
 
     def stats(self):
         return {"queue": self.queue.stats(), "store": self.store.stats(),
                 "train_loop_ckpt_time": self.ckpt_time,
-                "persists": self.persists}
+                "persists": self.persists,
+                "persist_mode": self.persist_mode,
+                "patch_persists": self.patch_persists,
+                "leaves_deferred": self.leaves_deferred,
+                "apply_leaves_skipped": (self._replica.skipped_applies
+                                         if self._replica is not None
+                                         else 0)}

@@ -16,7 +16,7 @@ log(n) recovery without its approximation.
 from __future__ import annotations
 
 import functools
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,20 +146,36 @@ def _parallel_replay(params, mu0, nu0, stacked, count0, lr, *,
 
 
 def replay_parallel(params, opt: AdamState, diffs: List[Tuple[int, Any]], *,
-                    lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+                    lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
+                    window: Optional[int] = None):
     """Exact log-depth replay via associative scan over the moment
     recurrences. Numerically identical (up to reassociation) to serial.
-    The jitted kernel is cached across calls (shapes keyed)."""
+    The jitted kernel is cached across calls (shapes keyed).
+
+    ``window`` bounds peak memory: instead of materializing all n
+    differentials as one dense fp32 stack — O(n · model) host/device
+    bytes — the scan runs over windows of at most ``window``
+    differentials, carrying ``(params, mu, nu, count)`` between them.
+    The moment recurrences chain exactly across the boundary (each
+    window's scan is seeded with the previous window's final moments),
+    so the result is numerically identical up to the same float
+    reassociation the unwindowed scan already accepts. ``None`` (or 0)
+    replays everything in one window."""
     if not diffs:
         return params, opt
-    gs = [maybe_decompress(p) for _, p in diffs]
-    n = len(gs)
-    stacked = jax.tree.map(lambda *xs: jnp.stack(
-        [x.astype(jnp.float32) for x in xs]), *gs)
-    p2, mu2, nu2 = _parallel_replay(params, opt.mu, opt.nu, stacked,
-                                    opt.count, jnp.float32(lr),
-                                    b1=b1, b2=b2, eps=eps)
-    return p2, AdamState(mu2, nu2, opt.count + n)
+    if window is not None and window < 0:
+        raise ValueError("window must be None or >= 0")
+    w = int(window) if window else len(diffs)
+    mu, nu, count = opt.mu, opt.nu, opt.count
+    for i in range(0, len(diffs), w):
+        gs = [maybe_decompress(p) for _, p in diffs[i:i + w]]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(
+            [x.astype(jnp.float32) for x in xs]), *gs)
+        params, mu, nu = _parallel_replay(params, mu, nu, stacked,
+                                          count, jnp.float32(lr),
+                                          b1=b1, b2=b2, eps=eps)
+        count = count + len(gs)
+    return params, AdamState(mu, nu, count)
 
 
 def merge_deltas_pairwise(deltas: List[Any]) -> Any:

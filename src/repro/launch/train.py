@@ -36,7 +36,9 @@ STRATEGIES = ("none", "lowdiff", "lowdiff_plus", "checkfreq", "gemini",
 
 
 def build_strategy(name: str, model, store, *, lr, rho, full_interval,
-                   batch_size, compressor="topk"):
+                   batch_size, compressor="topk", persist_mode="full",
+                   persist_threshold=0.0, fold_interval=16,
+                   replay_window=None):
     if name == "lowdiff":
         # 0 = auto: seed (f, b) from the Eq. (10) closed form and keep
         # adapting them from observed merge times (online tuning)
@@ -44,10 +46,14 @@ def build_strategy(name: str, model, store, *, lr, rho, full_interval,
                        full_interval=full_interval or None,
                        batch_size=batch_size or None,
                        compressor=compressor,
-                       sys_params=SystemParams())
+                       sys_params=SystemParams(),
+                       replay_window=replay_window)
     if name == "lowdiff_plus":
         return LowDiffPlus(model, store, lr=lr,
-                           persist_interval=batch_size or 1)
+                           persist_interval=batch_size or 1,
+                           persist_mode=persist_mode,
+                           persist_threshold=persist_threshold,
+                           fold_interval=fold_interval)
     if name == "checkfreq":
         return CheckFreq(model, store, lr=lr, interval=10)
     if name == "gemini":
@@ -91,13 +97,21 @@ def run(args):
         # resumed before new work. store.close() stops the worker.
         svc = MaintenanceService(
             store, gc_slice=getattr(args, "gc_slice", 64),
+            merge_slice=getattr(args, "merge_slice", 64),
             scrub_interval=getattr(args, "scrub_interval", 0.0))
         store.attach_maintenance(svc)
         svc.start()
     strat = (build_strategy(args.strategy, model, store, lr=args.lr,
                             rho=args.rho, full_interval=args.full_interval,
                             batch_size=args.batch_size,
-                            compressor=getattr(args, "compressor", "topk"))
+                            compressor=getattr(args, "compressor", "topk"),
+                            persist_mode=getattr(args, "persist_mode",
+                                                 "full"),
+                            persist_threshold=getattr(
+                                args, "persist_threshold", 0.0),
+                            fold_interval=getattr(args, "fold_interval", 16),
+                            replay_window=getattr(args, "replay_window",
+                                                  0) or None)
              if args.strategy != "none" else None)
     mode = ("lowdiff" if args.strategy == "lowdiff" else
             "lowdiff_plus" if args.strategy == "lowdiff_plus" else "dense")
@@ -200,6 +214,29 @@ def main():
                     help="background maintenance service: journaled "
                          "resumable GC + integrity scrub off the step "
                          "loop (off = synchronous GC fallback)")
+    ap.add_argument("--persist-mode", choices=("full", "incremental"),
+                    default="full",
+                    help="lowdiff_plus persistence: 'full' rewrites the "
+                         "whole replica every persist; 'incremental' "
+                         "writes only the leaves that changed since the "
+                         "last persist as a patch chain on a base full, "
+                         "folded back in the background (requires "
+                         "--format frame)")
+    ap.add_argument("--persist-threshold", type=float, default=0.0,
+                    help="incremental persist filter: defer re-persisting "
+                         "a dirty leaf until its accumulated relative "
+                         "L-inf change exceeds this (0 = exact: persist "
+                         "every changed leaf)")
+    ap.add_argument("--fold-interval", type=int, default=16,
+                    help="fold the patch chain into its base frame after "
+                         "this many incremental persists (0 = never)")
+    ap.add_argument("--merge-slice", type=int, default=64,
+                    help="leaves patched per journaled fold slice "
+                         "(bounded work between progress records)")
+    ap.add_argument("--replay-window", type=int, default=0,
+                    help="differentials per parallel-replay scan window; "
+                         "bounds peak recovery memory to O(window * "
+                         "model) (0 = one window)")
     ap.add_argument("--gc-slice", type=int, default=64,
                     help="keys swept per journaled GC slice (bounded "
                          "work between progress records)")

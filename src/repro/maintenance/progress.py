@@ -128,6 +128,10 @@ def _fold_pending(records: List[dict]) -> List[dict]:
             plans[k] = merged
         elif op == "cursor" and k in plans:
             plans[k]["pos"] = int(rec.get("pos", 0))
+            if rec.get("folded"):
+                # fold tasks mark sweep completion so a resume after a
+                # crash mid-commit skips straight to retiring the chain
+                plans[k]["folded"] = True
         elif op == "done":
             plans.pop(k, None)
     return [plans[k] for k in sorted(plans, key=lambda k: k[1])]

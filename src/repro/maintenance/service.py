@@ -26,6 +26,13 @@ progress into a :mod:`~repro.maintenance.progress` journal:
   into the shared snapshot (``CheckpointStore.merge_journal``); the
   snapshot write is atomic and watermark-guarded, so a crash mid-merge
   re-merges idempotently.
+* **Incremental merge (fold)** — folds a LowDiff+ incremental-persist
+  patch chain into its base frame in place
+  (``StorageBackend.patch``), ``merge_slice`` leaves per
+  cursor-journaled slice, then retires the chain. The patch blobs are
+  the fold's write-ahead log: they outlive the whole sweep, so a kill
+  mid-pwrite, mid-header-rewrite, or at any slice boundary re-folds
+  (or replays at recovery) to bit-identical bytes.
 
 Concurrency discipline: the worker never holds the store's manifest
 lock across blob I/O, task errors surface from :meth:`drain` with the
@@ -61,11 +68,13 @@ class MaintenanceService:
     resumed from the progress journal on :meth:`start`."""
 
     def __init__(self, store, *, gc_slice: int = 64, scrub_slice: int = 8,
-                 scrub_interval: float = 0.0, orphan_min_age_s: float = 60.0,
+                 merge_slice: int = 64, scrub_interval: float = 0.0,
+                 orphan_min_age_s: float = 60.0,
                  drain_timeout: float = 120.0):
         self.store = store
         self.gc_slice = max(1, int(gc_slice))
         self.scrub_slice = max(1, int(scrub_slice))
+        self.merge_slice = max(1, int(merge_slice))
         self.scrub_interval = scrub_interval
         self.orphan_min_age_s = orphan_min_age_s
         self.drain_timeout = drain_timeout
@@ -92,6 +101,9 @@ class MaintenanceService:
         self.corrupt_found = 0
         self.orphans_swept = 0
         self.merge_runs = 0
+        self.fold_runs = 0
+        self.folded_patches = 0
+        self.fold_transient_skips = 0
         self.resumed = 0
 
     # ------------------------------------------------------------------
@@ -175,6 +187,12 @@ class MaintenanceService:
     def request_merge(self) -> None:
         self._submit(("merge", None))
 
+    def request_fold(self) -> None:
+        """Fold the newest full's accumulated patch chain into its base
+        frame (incremental-merging persistence) — journaled and sliced
+        like GC, so a kill at any boundary resumes."""
+        self._submit(("fold", None))
+
     def _submit(self, req: Tuple[str, Any]) -> None:
         with self._cv:
             self._pending += 1
@@ -223,6 +241,8 @@ class MaintenanceService:
             self._run_scrub()
         elif kind == "merge":
             self._run_merge()
+        elif kind == "fold":
+            self._run_fold()
         elif kind == "resume":
             self._resume(arg)
         else:
@@ -242,6 +262,12 @@ class MaintenanceService:
         elif task == "merge":
             # the merge itself is atomic + watermark-idempotent: redo it
             self._merge_step(int(rec["id"]))
+        elif task == "fold":
+            self._fold_sweep(int(rec["id"]), rec["base"],
+                             list(rec.get("patches", [])),
+                             int(rec.get("state_step", 0)),
+                             int(rec.get("pos", 0)),
+                             bool(rec.get("folded")))
         else:
             raise ValueError(f"unknown journaled task {task!r}")
 
@@ -323,6 +349,75 @@ class MaintenanceService:
         self._last_scrub = time.monotonic()
 
     # ------------------------------------------------------------------
+    # incremental merge: fold the patch chain into its base frame
+    # ------------------------------------------------------------------
+    def _run_fold(self) -> None:
+        plan = self.store.fold_plan()
+        if plan is None:
+            return
+        base_key, patch_keys, state_step = plan
+        tid = self.progress.next_id()
+        self.progress.append({"task": "fold", "id": tid, "op": "plan",
+                              "base": base_key, "patches": patch_keys,
+                              "state_step": state_step})
+        self._crash("fold:planned")
+        self._fold_sweep(tid, base_key, patch_keys, state_step, 0, False)
+
+    def _fold_sweep(self, tid: int, base_key: str, patch_keys: List[str],
+                    state_step: int, pos: int, folded: bool) -> None:
+        """Sweep phase: pwrite the merged dirty leaves into the base
+        frame in bounded ``merge_slice``-leaf slices, a cursor record
+        after each; then mark the sweep folded and retire the chain.
+        Every slice is idempotent — the patch blobs (the write-ahead
+        log) outlive the whole sweep, so a kill anywhere re-folds to
+        identical bytes on resume."""
+        if not folded:
+            try:
+                updates = self.store.fold_updates(base_key, patch_keys)
+            except (RetryExhaustedError, TransientStoreError):
+                # flaky infrastructure, not corruption: leave the plan
+                # journaled (it resumes on the next start / request)
+                # — a transient must never poison the worker
+                self.fold_transient_skips += 1
+                return
+            if updates is None:
+                # chain or base gone since the plan (superseded by a
+                # newer full / GC): nothing left to fold — retire
+                self.progress.append({"task": "fold", "id": tid,
+                                      "op": "done"})
+                self.progress.compact_if_idle()
+                return
+            names = sorted(updates)
+            while pos < len(names):
+                chunk = {n: updates[n]
+                         for n in names[pos:pos + self.merge_slice]}
+                try:
+                    self.store.fold_slice(base_key, chunk)
+                except (RetryExhaustedError, TransientStoreError):
+                    self.fold_transient_skips += 1
+                    return                # cursor journaled: resumes here
+                except FileNotFoundError:
+                    # base deleted under the fold (concurrent GC after a
+                    # newer full): the chain is superseded — retire
+                    self.progress.append({"task": "fold", "id": tid,
+                                          "op": "done"})
+                    self.progress.compact_if_idle()
+                    return
+                pos += len(chunk)
+                self._crash("fold:patched_slice")
+                self.progress.append({"task": "fold", "id": tid,
+                                      "op": "cursor", "pos": pos})
+                self._crash("fold:cursored")
+            self.progress.append({"task": "fold", "id": tid, "op": "cursor",
+                                  "pos": pos, "folded": True})
+            self._crash("fold:folded")
+        self.store.fold_commit(base_key, patch_keys, state_step)
+        self.progress.append({"task": "fold", "id": tid, "op": "done"})
+        self.progress.compact_if_idle()
+        self.fold_runs += 1
+        self.folded_patches += len(patch_keys)
+
+    # ------------------------------------------------------------------
     # journal-segment merge
     # ------------------------------------------------------------------
     def _run_merge(self) -> None:
@@ -347,6 +442,10 @@ class MaintenanceService:
                 "scrub_transient_skips": self.scrub_transient_skips,
                 "corrupt_found": self.corrupt_found,
                 "orphans_swept": self.orphans_swept,
-                "merge_runs": self.merge_runs, "resumed": self.resumed,
+                "merge_runs": self.merge_runs,
+                "fold_runs": self.fold_runs,
+                "folded_patches": self.folded_patches,
+                "fold_transient_skips": self.fold_transient_skips,
+                "resumed": self.resumed,
                 "error": repr(self.error) if self.error else None,
                 "progress": self.progress.stats()}
