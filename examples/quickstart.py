@@ -12,9 +12,9 @@ import shutil
 import jax
 import numpy as np
 
-from repro.checkpoint import make_store
+from repro.checkpoint import StoreConfig, TierSpec
 from repro.configs import get_config
-from repro.core.lowdiff import LowDiff
+from repro.core.engine import EngineConfig, make_engine
 from repro.core.steps import init_state
 from repro.data.synthetic import TokenStream
 from repro.models.registry import build_model
@@ -28,10 +28,15 @@ def main():
     model = build_model(cfg)
     print(f"model: {cfg.name} ({model.n_params() / 1e6:.1f}M params)")
 
-    # backend="sharded" / "memory" select the other storage tiers
-    store = make_store(CKPT_DIR, backend="local", retention_fulls=2)
-    lowdiff = LowDiff(model, store, rho=0.01, lr=1e-3,
-                      full_interval=10, batch_size=2)
+    # the store is a declarative tier stack: swap TierSpec("local") for
+    # TierSpec("sharded")/TierSpec("memory")/... — or prepend
+    # TierSpec("peer", replicas=2) for Checkmate-style peer replication
+    store = StoreConfig(CKPT_DIR, tiers=[TierSpec("local")],
+                        retention_fulls=2).build()
+    lowdiff = make_engine(
+        EngineConfig(strategy="lowdiff", rho=0.01, lr=1e-3,
+                     full_interval=10, batch_size=2),
+        model, store=store)
     state = init_state(model, jax.random.PRNGKey(0))
     stream = TokenStream(cfg, seq_len=64, batch=4)
 

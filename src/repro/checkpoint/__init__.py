@@ -1,40 +1,60 @@
 """Checkpoint storage engine: chain store + pluggable backends.
 
-``make_store`` is the one-stop factory used by the launcher, examples
-and benchmarks to select a backend by name::
+Construction is declarative: a store is a typed list of tier specs
+(:class:`StoreConfig` / :class:`TierSpec` in
+:mod:`repro.checkpoint.config`) —
 
-    store = make_store("/tmp/ck", backend="sharded", shards=8,
-                       retention_fulls=2)
-    store = make_store("/tmp/ck", backend="remote",
-                       remote_url="fake://bucket", chunk_mb=2.0)
+::
+
+    store = StoreConfig("/tmp/ck", tiers=[
+        TierSpec("peer", replicas=2, hub="cluster"),
+        TierSpec("memory", capacity_mb=256),
+        TierSpec("local"),
+    ], retention_fulls=2).build()
+
+The legacy ``make_store(root, backend="...")`` keyword factory remains
+as a deprecated shim delegating to :meth:`StoreConfig.from_legacy`.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from repro.checkpoint.backends import (BACKENDS, LocalFSBackend,
                                        MemoryTierBackend, ShardedBackend,
                                        StorageBackend, make_backend,
                                        make_pspec_splitter)
+from repro.checkpoint.config import StoreConfig, StoreConfigError, TierSpec
 from repro.checkpoint.io import FORMATS, FrameCorruptionError
-from repro.checkpoint.journal import (JournalSegment, ManifestJournal,
+from repro.checkpoint.journal import (JournalSegment, JournalTap,
+                                      ManifestJournal,
                                       SegmentedManifestJournal)
+from repro.checkpoint.peer import (LoopbackTransport, PeerGroup, PeerHub,
+                                   PeerInfo, PeerNode, PeerReplicaBackend,
+                                   PeerServer, PeerUnreachableError,
+                                   SocketTransport, Transport, get_hub,
+                                   reset_hub)
 from repro.checkpoint.remote import (ChecksumError, FakeObjectStore,
                                      FaultInjector, FilesystemObjectStore,
                                      ObjectStore, RemoteObjectBackend,
                                      RetryExhaustedError,
                                      TransientStoreError,
                                      make_remote_backend)
-from repro.checkpoint.store import CheckpointStore
+from repro.checkpoint.store import CheckpointStore, order_fulls
 
 __all__ = ["BACKENDS", "FORMATS", "CheckpointStore", "ChecksumError",
            "FakeObjectStore", "FaultInjector", "FilesystemObjectStore",
-           "FrameCorruptionError", "JournalSegment", "LocalFSBackend",
-           "ManifestJournal", "MemoryTierBackend", "ObjectStore",
-           "RemoteObjectBackend", "RetryExhaustedError",
-           "SegmentedManifestJournal", "ShardedBackend", "StorageBackend",
-           "TransientStoreError", "make_backend", "make_pspec_splitter",
-           "make_remote_backend", "make_store"]
+           "FrameCorruptionError", "JournalSegment", "JournalTap",
+           "LocalFSBackend", "LoopbackTransport", "ManifestJournal",
+           "MemoryTierBackend", "ObjectStore", "PeerGroup", "PeerHub",
+           "PeerInfo", "PeerNode", "PeerReplicaBackend", "PeerServer",
+           "PeerUnreachableError", "RemoteObjectBackend",
+           "RetryExhaustedError", "SegmentedManifestJournal",
+           "ShardedBackend", "SocketTransport", "StorageBackend",
+           "StoreConfig", "StoreConfigError", "TierSpec",
+           "TransientStoreError", "Transport", "get_hub", "make_backend",
+           "make_pspec_splitter", "make_remote_backend", "make_store",
+           "order_fulls", "reset_hub"]
 
 
 def make_store(root: Optional[str], *, backend: str = "local",
@@ -44,16 +64,19 @@ def make_store(root: Optional[str], *, backend: str = "local",
                max_retries: int = 4, remote_fault_rate: float = 0.0,
                fmt: str = "frame", eviction: str = "fifo",
                host_id: Optional[str] = None) -> CheckpointStore:
-    """Build a CheckpointStore over the named backend. ``fmt`` picks the
-    write serialization ("frame" streamed zero-copy / "npz" legacy);
-    reads sniff, so existing npz chains stay recoverable either way.
-    ``eviction`` selects the memory tier's victim policy (fifo / lru
-    over size-class buckets); ``host_id`` switches the manifest journal
-    to per-host segments for multi-controller jobs."""
-    be = make_backend(backend, root, shards=shards, capacity_mb=capacity_mb,
-                      remote_url=remote_url, chunk_mb=chunk_mb,
-                      max_retries=max_retries,
-                      remote_fault_rate=remote_fault_rate, fmt=fmt,
-                      eviction=eviction)
-    return CheckpointStore(root, backend=be, retention_fulls=retention_fulls,
-                           compact_every=compact_every, host_id=host_id)
+    """Deprecated shim: build a CheckpointStore from the legacy keyword
+    surface. New code should declare the store with
+    :class:`StoreConfig` and call :meth:`StoreConfig.build` — the tier
+    list expresses what these keywords implied (and more, e.g. the
+    peer replication tier)."""
+    warnings.warn(
+        "make_store() is deprecated; declare the store with "
+        "repro.checkpoint.config.StoreConfig and call build()",
+        DeprecationWarning, stacklevel=2)
+    cfg = StoreConfig.from_legacy(
+        root, backend=backend, shards=shards, capacity_mb=capacity_mb,
+        retention_fulls=retention_fulls, compact_every=compact_every,
+        remote_url=remote_url, chunk_mb=chunk_mb, max_retries=max_retries,
+        remote_fault_rate=remote_fault_rate, fmt=fmt, eviction=eviction,
+        host_id=host_id)
+    return cfg.build()

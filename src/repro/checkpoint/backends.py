@@ -48,6 +48,16 @@ class StorageBackend(abc.ABC):
     #: sniffs, so mixed-format chains recover transparently.
     fmt: str = "frame"
 
+    @property
+    def provenance(self) -> str:
+        """Durability class recorded per manifest entry (``tier`` tag):
+        where an acked put actually lives. Recovery orders fulls
+        source-aware with it — a peer-served replica must never shadow
+        a newer durable full. Wrapping tiers forward their lower tier's
+        provenance; the RAM tier reports "memory" (its ack is
+        RAM-durable only until the async write-back lands)."""
+        return self.name
+
     @abc.abstractmethod
     def put(self, key: str, obj: Any) -> int:
         """Durably (or tier-durably) store obj. Returns bytes written."""
@@ -922,43 +932,30 @@ def make_backend(name: str, root: Optional[str], *, shards: int = 4,
                  remote_fault_rate: float = 0.0,
                  fmt: str = "frame",
                  eviction: str = "fifo") -> StorageBackend:
-    """Build a backend by name. ``memory`` layers the RAM tier over a
-    LocalFS lower tier at ``root`` (pure-RAM when root is None or
-    memory_spill is False). ``remote`` layers the RAM tier over a
-    :class:`~repro.checkpoint.remote.RemoteObjectBackend` — the async
-    write-back absorbs object-store latency, so the training loop never
-    blocks on the remote tier. ``fmt`` selects the write serialization:
-    ``"frame"`` (streamed zero-copy, the default) or ``"npz"`` (seed
-    format); reads always sniff, so either can open old checkpoints."""
-    if name == "local":
-        if root is None:
-            raise ValueError("local backend requires a root directory")
-        return LocalFSBackend(root, fmt=fmt)
-    if name == "memory":
-        lower = (LocalFSBackend(root, fmt=fmt)
-                 if root is not None and memory_spill else None)
-        cap = int(capacity_mb * 2**20) if capacity_mb else None
-        return MemoryTierBackend(lower, capacity_bytes=cap,
-                                 eviction=eviction)
-    if name == "sharded":
-        if root is None:
-            raise ValueError("sharded backend requires a root directory")
-        return ShardedBackend(root, num_shards=shards, fmt=fmt)
-    if name == "remote":
-        # function-level import: remote.py subclasses StorageBackend, so
-        # importing it at module scope here would be circular
-        from repro.checkpoint.remote import make_remote_backend
-        url = remote_url
-        if url is None:
-            if root is None:
-                raise ValueError(
-                    "remote backend requires --remote-url or a root "
-                    "directory (which becomes file://<root>)")
-            url = f"file://{root}"
-        lower = make_remote_backend(
-            url, chunk_bytes=int(chunk_mb * 2**20), max_retries=max_retries,
-            journal_root=root, fault_rate=remote_fault_rate, fmt=fmt)
-        cap = int(capacity_mb * 2**20) if capacity_mb else None
-        return MemoryTierBackend(lower, capacity_bytes=cap,
-                                 eviction=eviction)
-    raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
+    """Deprecated shim: build a backend by legacy name. New code should
+    declare the stack with :class:`repro.checkpoint.config.StoreConfig`
+    / :class:`~repro.checkpoint.config.TierSpec` — this delegates the
+    name -> tier-list interpretation to
+    :meth:`StoreConfig.from_legacy` and builds from there."""
+    import warnings
+    warnings.warn(
+        "make_backend() is deprecated; declare the tier stack with "
+        "repro.checkpoint.config.StoreConfig and call build_backend()",
+        DeprecationWarning, stacklevel=2)
+    from repro.checkpoint.config import StoreConfig
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
+    if name == "local" and root is None:
+        raise ValueError("local backend requires a root directory")
+    if name == "sharded" and root is None:
+        raise ValueError("sharded backend requires a root directory")
+    if name == "remote" and remote_url is None and root is None:
+        raise ValueError("remote backend requires --remote-url or a root "
+                         "directory (which becomes file://<root>)")
+    if name == "memory" and not memory_spill:
+        root = None  # pure-RAM tier: no lower backend to spill to
+    cfg = StoreConfig.from_legacy(
+        root, backend=name, shards=shards, capacity_mb=capacity_mb,
+        remote_url=remote_url, chunk_mb=chunk_mb, max_retries=max_retries,
+        remote_fault_rate=remote_fault_rate, fmt=fmt, eviction=eviction)
+    return cfg.build_backend()

@@ -509,6 +509,38 @@ class SegmentedManifestJournal:
                 "watermarks": dict(self._watermarks)}
 
 
+class JournalTap:
+    """Transparent journal wrapper that forwards every append to
+    ``tap(op, kind, entry=, key=)`` *after* it is applied and durable
+    locally. The chain store installs one when its backend exposes
+    ``on_journal_append`` (the peer tier), so manifest records are
+    replicated to peers without the journal implementations knowing.
+    The tap is best-effort: a tap failure never fails the local append.
+    ``append_untapped`` bypasses the tap — used when *adopting* records
+    that came from peers, which must not echo back out."""
+
+    def __init__(self, inner, tap):
+        self.inner = inner
+        self.tap = tap
+
+    def append(self, op: str, kind: str, *, entry: Optional[dict] = None,
+               key: Optional[str] = None) -> int:
+        n = self.inner.append(op, kind, entry=entry, key=key)
+        try:
+            self.tap(op, kind, entry=entry, key=key)
+        except Exception:  # noqa: BLE001 - replication is best-effort
+            pass
+        return n
+
+    def append_untapped(self, op: str, kind: str, *,
+                        entry: Optional[dict] = None,
+                        key: Optional[str] = None) -> int:
+        return self.inner.append(op, kind, entry=entry, key=key)
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+
 def _entry_key(e: dict) -> Optional[str]:
     key = e.get("key")
     if key is None and "path" in e:  # pre-journal entries carried paths only

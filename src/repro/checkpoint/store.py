@@ -51,11 +51,37 @@ import numpy as np
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import LocalFSBackend, StorageBackend
-from repro.checkpoint.journal import (ManifestJournal, MemoryJournal,
+from repro.checkpoint.journal import (JournalTap, ManifestJournal,
+                                      MemoryJournal,
                                       SegmentedManifestJournal, _entry_key)
 
 #: manifest kinds that reference a backend blob (chain entries)
 CHAIN_KINDS = ("fulls", "diffs", "batches", "patches")
+
+#: source-aware durability ranking for recovery's fallback order: a
+#: peer-adopted entry (bytes only reachable over the network, possibly
+#: a pre-fold snapshot) ranks below the RAM tier, which ranks below any
+#: durable tier. Entries without a tier tag (pre-provenance manifests)
+#: are treated as durable — exactly the old behavior.
+DURABILITY_RANK = {"peer": 0, "memory": 1}
+
+
+def entry_rank(entry: dict) -> int:
+    return DURABILITY_RANK.get(entry.get("tier"), 2)
+
+
+def order_fulls(fulls: List[dict]) -> List[dict]:
+    """Recovery preference order over full-checkpoint entries, newest
+    and most-durable first: by the state the blob actually represents
+    (``state_step`` — a folded base has advanced past its nominal
+    ``step``), then by nominal step, then by source durability. The
+    provenance tie-break is the stale-shadow guard: a peer-served
+    replica of some step can never shadow a durable full whose folded
+    state is at least as new."""
+    return sorted(fulls,
+                  key=lambda e: (int(e.get("state_step", e["step"])),
+                                 int(e["step"]), entry_rank(e)),
+                  reverse=True)
 
 
 def walk_leaves(tree, prefix: str = ""):
@@ -126,6 +152,12 @@ class CheckpointStore:
                                                compact_every=compact_every)
         else:
             self.journal = MemoryJournal()
+        # a backend that replicates manifest records to peers (the peer
+        # tier) taps every journal append; the journal implementations
+        # stay oblivious
+        tap = getattr(backend, "on_journal_append", None)
+        if tap is not None:
+            self.journal = JournalTap(self.journal, tap)
         self.host_id = host_id
         #: attached background MaintenanceService (see
         #: repro.maintenance); None means synchronous fallbacks
@@ -150,6 +182,11 @@ class CheckpointStore:
         # (frame / npz) — mixed-format chains stay self-describing in
         # the journal even though readers also sniff the magic bytes
         entry.setdefault("format", getattr(self.backend, "fmt", "npz"))
+        # source provenance: which durability class acked this put (see
+        # order_fulls — recovery's source-aware fallback order)
+        entry.setdefault("tier", getattr(self.backend, "provenance",
+                                         getattr(self.backend, "name",
+                                                 "local")))
         with self._lock:
             self.journal.append("add", kind, entry=entry)
             self.bytes_written += nbytes
@@ -333,8 +370,7 @@ class CheckpointStore:
         from repro.checkpoint.io import FrameCorruptionError
         from repro.checkpoint.remote import RetryExhaustedError
         with self._lock:
-            fulls = sorted(self.manifest["fulls"], key=lambda e: e["step"],
-                           reverse=True)
+            fulls = order_fulls(self.manifest["fulls"])
         if not fulls:
             raise FileNotFoundError("no persisted checkpoint")
         last_err = None
@@ -358,6 +394,73 @@ class CheckpointStore:
         raise FileNotFoundError(
             f"none of {len(fulls)} full checkpoints is loadable "
             f"(last error: {last_err})")
+
+    # ------------------------------------------------------------------
+    # peer-manifest adoption (replacement-host recovery)
+    # ------------------------------------------------------------------
+    def adopt_peer_manifest(self, src: Optional[str] = None) -> int:
+        """Rebuild a dead host's manifest from the records its peers
+        hold (the peer tier replicates every journal append via the
+        journal tap). Called on a replacement host whose local journal
+        is empty — or on a restarted host to pick up entries it lost.
+
+        Semantics:
+
+        * empty local manifest (no fulls): the peers' record stream is
+          replayed verbatim — add / del / replace in order — so the
+          adopted manifest is exactly the dead host's, with every
+          adopted entry re-tagged ``tier="peer"`` (its bytes are only
+          reachable over the network until re-persisted).
+        * local fulls already exist (restart with intact storage): only
+          ``add`` records for keys the local manifest does not know are
+          adopted — a peer's del/replace must never regress local
+          durable state, and the ``tier="peer"`` tag plus
+          :func:`order_fulls` guarantee an adopted entry cannot shadow
+          a newer durable full.
+
+        Adopted appends bypass the journal tap (no echo back to the
+        peers), and entries whose blob is reachable neither locally nor
+        on any peer are pruned afterwards. Returns the number of
+        records applied; stores without a peer tier return 0."""
+        fetch = getattr(self.backend, "peer_manifest", None)
+        if fetch is None:
+            return 0
+        records = fetch(src)
+        applied = 0
+        with self._lock:
+            append = getattr(self.journal, "append_untapped",
+                             self.journal.append)
+            have_fulls = bool(self.manifest.get("fulls"))
+            known = {(kind, self._entry_key(e))
+                     for kind, entries in self.manifest.items()
+                     for e in entries if isinstance(e, dict)}
+            for _, _, rec in records:
+                op, kind = rec.get("op"), rec.get("kind")
+                entry, key = rec.get("entry"), rec.get("key")
+                if op == "add" and entry is not None:
+                    k = (kind, self._entry_key(entry))
+                    if k in known:
+                        continue
+                    e = dict(entry)
+                    e["tier"] = "peer"
+                    append("add", kind, entry=e)
+                    known.add(k)
+                    applied += 1
+                elif have_fulls:
+                    continue   # never let peers mutate durable state
+                elif op == "del" and key is not None:
+                    append("del", kind, key=key)
+                    known.discard((kind, key))
+                    applied += 1
+                elif op == "replace" and entry is not None:
+                    e = dict(entry)
+                    e["tier"] = "peer"
+                    append("replace", kind, key=key, entry=e)
+                    known.add((kind, self._entry_key(e)))
+                    applied += 1
+        self._prune_missing()
+        self._update_protected()
+        return applied
 
     def fold_plan(self):
         """Mark phase of the incremental merge: ``(base_key,

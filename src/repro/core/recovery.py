@@ -38,12 +38,21 @@ def load_latest_chain(store):
     replays the longer differential chain from there. Entries the
     maintenance scrubber quarantined were already removed from the
     manifest's chain kinds, so they are skipped proactively without
-    touching storage at all. Returns (state, [(step, payload), ...]);
-    raises FileNotFoundError when no full checkpoint is loadable."""
+    touching storage at all.
+
+    The fallback order is *source-aware* (``order_fulls``): fulls are
+    preferred by the state they actually represent (``state_step``),
+    then by nominal step, then by the durability of the tier that
+    recorded them (durable > memory > peer). On a replacement host the
+    peer-adopted entries are typically the ONLY entries — peer-first
+    recovery at network speed — while on a host whose durable storage
+    survived, a stale peer-served replica can never shadow a newer
+    durable full. Returns (state, [(step, payload), ...]); raises
+    FileNotFoundError when no full checkpoint is loadable."""
     from repro.checkpoint.io import FrameCorruptionError
     from repro.checkpoint.remote import RetryExhaustedError
-    fulls = sorted(store.manifest["fulls"], key=lambda e: e["step"],
-                   reverse=True)
+    from repro.checkpoint.store import order_fulls
+    fulls = order_fulls(store.manifest["fulls"])
     if not fulls:
         raise FileNotFoundError("no full checkpoint")
     last_err = None

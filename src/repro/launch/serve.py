@@ -23,12 +23,36 @@ from repro.data.synthetic import make_batch
 from repro.models.registry import build_model
 
 
+def load_params(model, ckpt_dir):
+    """Newest persisted params from a checkpoint directory, or None
+    when the store holds no loadable full. The store is declared with
+    the default single-tier StoreConfig — serving only reads."""
+    from repro.checkpoint.config import StoreConfig
+    store = StoreConfig(root=ckpt_dir).build()
+    try:
+        state, step = store.load_latest_state()
+    except FileNotFoundError:
+        return None
+    finally:
+        store.close()
+    params = state.get("params", state) if isinstance(state, dict) else state
+    print(f"loaded checkpoint step {step} from {ckpt_dir}")
+    return jax.tree.map(jnp.asarray, params)
+
+
 def run(args):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    params = None
+    if getattr(args, "ckpt_dir", None):
+        params = load_params(model, args.ckpt_dir)
+        if params is None:
+            print(f"no loadable checkpoint in {args.ckpt_dir}; "
+                  f"using random init")
+    if params is None:
+        params = model.init(jax.random.PRNGKey(0))
     total = args.prompt_len + args.gen
     cache = model.init_cache(args.batch, total)
     step = jax.jit(lambda p, c, b: model.decode_step(p, c, b, total))
@@ -66,6 +90,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="load the newest persisted params from this "
+                         "checkpoint store (random init when absent)")
     run(ap.parse_args())
 
 

@@ -4,67 +4,57 @@ Runs a real training loop (synthetic data, native Adam) with LowDiff /
 LowDiff+ / baselines attached, reports per-strategy overhead vs the
 no-checkpoint bound, and supports failure injection + recovery.
 
+All flags map through :class:`repro.core.engine.EngineConfig` (engine
+knobs) and :class:`repro.checkpoint.config.StoreConfig` (the tier
+stack) — ``EngineConfig.from_args`` owns the flag→config translation
+in one place, and ``tests/test_flag_config_sync.py`` fails if a flag
+and its config field drift apart.
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.train --arch gpt2-l --reduced \
         --steps 50 --strategy lowdiff --ckpt-dir /tmp/ck
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --reduced \
         --steps 30 --strategy lowdiff_plus --fail-at 20
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-l --reduced \
+        --steps 40 --backend local --peers 2 --fail-at 25
 """
 from __future__ import annotations
 
 import argparse
 import shutil
 import time
+import warnings
 
 import jax
 import numpy as np
 
-from repro.checkpoint import BACKENDS, FORMATS, make_store
-from repro.maintenance import MaintenanceService
+from repro.checkpoint import BACKENDS, FORMATS
 from repro.configs import get_config
-from repro.core.baselines import CheckFreq, FullSync, Gemini, NaiveDC
-from repro.core.config_opt import SystemParams
-from repro.core.lowdiff import LowDiff
-from repro.core.lowdiff_plus import LowDiffPlus
+from repro.core.engine import STRATEGIES, EngineConfig, make_engine
 from repro.core.steps import init_state, make_train_step
 from repro.data.synthetic import TokenStream
 from repro.models.registry import build_model
-
-STRATEGIES = ("none", "lowdiff", "lowdiff_plus", "checkfreq", "gemini",
-              "naive_dc", "full_sync")
 
 
 def build_strategy(name: str, model, store, *, lr, rho, full_interval,
                    batch_size, compressor="topk", persist_mode="full",
                    persist_threshold=0.0, fold_interval=16,
                    replay_window=None):
-    if name == "lowdiff":
-        # 0 = auto: seed (f, b) from the Eq. (10) closed form and keep
-        # adapting them from observed merge times (online tuning)
-        return LowDiff(model, store, rho=rho, lr=lr,
-                       full_interval=full_interval or None,
-                       batch_size=batch_size or None,
-                       compressor=compressor,
-                       sys_params=SystemParams(),
-                       replay_window=replay_window)
-    if name == "lowdiff_plus":
-        return LowDiffPlus(model, store, lr=lr,
-                           persist_interval=batch_size or 1,
-                           persist_mode=persist_mode,
-                           persist_threshold=persist_threshold,
-                           fold_interval=fold_interval)
-    if name == "checkfreq":
-        return CheckFreq(model, store, lr=lr, interval=10)
-    if name == "gemini":
-        return Gemini(model, store, lr=lr, interval=1,
-                      persist_interval=full_interval)
-    if name == "naive_dc":
-        return NaiveDC(model, store, lr=lr, rho=rho,
-                       full_interval=full_interval)
-    if name == "full_sync":
-        return FullSync(model, store, lr=lr, interval=full_interval)
-    return None
+    """Deprecated shim: construct a strategy from loose keywords. New
+    code builds an :class:`EngineConfig` and calls ``make_engine``."""
+    warnings.warn(
+        "build_strategy() is deprecated; build an "
+        "repro.core.engine.EngineConfig and call make_engine()",
+        DeprecationWarning, stacklevel=2)
+    cfg = EngineConfig(strategy=name, lr=lr, rho=rho,
+                       full_interval=full_interval or 0,
+                       batch_size=batch_size or 0, compressor=compressor,
+                       persist_mode=persist_mode,
+                       persist_threshold=persist_threshold,
+                       fold_interval=fold_interval,
+                       replay_window=replay_window or 0)
+    return make_engine(cfg, model, store=store)
 
 
 def run(args):
@@ -74,45 +64,11 @@ def run(args):
     model = build_model(cfg)
     print(f"arch={cfg.name} params={model.n_params() / 1e6:.1f}M "
           f"strategy={args.strategy}")
-    if args.clean and args.ckpt_dir:
+    if getattr(args, "clean", False) and args.ckpt_dir:
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
-    store = (make_store(args.ckpt_dir,
-                        backend=getattr(args, "backend", "local"),
-                        shards=getattr(args, "shards", 4),
-                        capacity_mb=getattr(args, "memory_capacity_mb", None),
-                        retention_fulls=getattr(args, "retention", 0),
-                        remote_url=getattr(args, "remote_url", None),
-                        chunk_mb=getattr(args, "chunk_mb", 4.0),
-                        max_retries=getattr(args, "max_retries", 4),
-                        remote_fault_rate=getattr(args, "remote_fault_rate",
-                                                  0.0),
-                        fmt=getattr(args, "format", "frame"),
-                        eviction=getattr(args, "eviction", "fifo"),
-                        host_id=getattr(args, "host_id", None))
-             if args.ckpt_dir else None)
-    if store is not None and getattr(args, "maintenance", "off") == "on":
-        # background maintenance: retention GC sweeps in journaled
-        # slices off the step loop, the scrubber re-verifies cold blobs
-        # periodically, and an unfinished task from a previous crash is
-        # resumed before new work. store.close() stops the worker.
-        svc = MaintenanceService(
-            store, gc_slice=getattr(args, "gc_slice", 64),
-            merge_slice=getattr(args, "merge_slice", 64),
-            scrub_interval=getattr(args, "scrub_interval", 0.0))
-        store.attach_maintenance(svc)
-        svc.start()
-    strat = (build_strategy(args.strategy, model, store, lr=args.lr,
-                            rho=args.rho, full_interval=args.full_interval,
-                            batch_size=args.batch_size,
-                            compressor=getattr(args, "compressor", "topk"),
-                            persist_mode=getattr(args, "persist_mode",
-                                                 "full"),
-                            persist_threshold=getattr(
-                                args, "persist_threshold", 0.0),
-                            fold_interval=getattr(args, "fold_interval", 16),
-                            replay_window=getattr(args, "replay_window",
-                                                  0) or None)
-             if args.strategy != "none" else None)
+    engine_cfg = EngineConfig.from_args(args)
+    store = engine_cfg.build_store()
+    strat = make_engine(engine_cfg, model, store=store)
     mode = ("lowdiff" if args.strategy == "lowdiff" else
             "lowdiff_plus" if args.strategy == "lowdiff_plus" else "dense")
     state = init_state(model, jax.random.PRNGKey(args.seed), mode=mode)
@@ -159,7 +115,7 @@ def run(args):
     return losses, times
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-l")
     ap.add_argument("--reduced", action="store_true",
@@ -204,6 +160,24 @@ def main():
     ap.add_argument("--remote-fault-rate", type=float, default=0.0,
                     help="injected transient-fault probability on fake:// "
                          "stores (exercises retry/backoff)")
+    ap.add_argument("--peers", type=int, default=0,
+                    help="replicate every differential to this many "
+                         "failure-domain-diverse peer hosts' memory "
+                         "(Checkmate-style tier above the local stack; "
+                         "0 = off). Single-process runs simulate peers "
+                         "in-process via the loopback transport")
+    ap.add_argument("--peer-hub", default=None,
+                    help="peer membership group name; hosts sharing a hub "
+                         "replicate to each other (default: 'default')")
+    ap.add_argument("--peer-domain", default="d0",
+                    help="failure domain of this host (rack/pod); peer "
+                         "selection prefers one replica per domain")
+    ap.add_argument("--peer-window", type=int, default=8,
+                    help="max in-flight peer replication sends before "
+                         "put() backpressures")
+    ap.add_argument("--peer-fault-rate", type=float, default=0.0,
+                    help="injected transient-fault probability on peer "
+                         "sends (exercises retry/backoff)")
     ap.add_argument("--retention", type=int, default=0,
                     help="keep this many full checkpoints + their chains "
                          "(0 = never garbage-collect)")
@@ -251,7 +225,11 @@ def main():
     ap.add_argument("--fail-at", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
-    run(ap.parse_args())
+    return ap
+
+
+def main():
+    run(build_parser().parse_args())
 
 
 if __name__ == "__main__":

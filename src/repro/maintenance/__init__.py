@@ -3,7 +3,7 @@ integrity scrubbing, and multi-controller journal-segment merging.
 
 Usage::
 
-    store = make_store(root, retention_fulls=2)
+    store = StoreConfig(root, retention_fulls=2).build()
     svc = MaintenanceService(store, gc_slice=64, scrub_interval=30.0)
     store.attach_maintenance(svc)
     svc.start()                 # resumes any crashed task first

@@ -104,6 +104,8 @@ class MaintenanceService:
         self.fold_runs = 0
         self.folded_patches = 0
         self.fold_transient_skips = 0
+        self.peer_prune_runs = 0
+        self.peer_pruned = 0
         self.resumed = 0
 
     # ------------------------------------------------------------------
@@ -193,6 +195,16 @@ class MaintenanceService:
         like GC, so a kill at any boundary resumes."""
         self._submit(("fold", None))
 
+    def request_peer_prune(self) -> None:
+        """Drop peer replicas whose keys left the live manifest (folded
+        patches, GC'd chains): peer memory is a recovery accelerator,
+        not an archive, so it must track the live chain. Queued
+        automatically after fold and GC completions when the store's
+        backend has a peer tier; a no-op otherwise. Best-effort and
+        idempotent (not journaled — a missed prune is re-covered by the
+        next one)."""
+        self._submit(("peer_prune", None))
+
     def _submit(self, req: Tuple[str, Any]) -> None:
         with self._cv:
             self._pending += 1
@@ -243,6 +255,8 @@ class MaintenanceService:
             self._run_merge()
         elif kind == "fold":
             self._run_fold()
+        elif kind == "peer_prune":
+            self._run_peer_prune()
         elif kind == "resume":
             self._resume(arg)
         else:
@@ -302,6 +316,25 @@ class MaintenanceService:
         self.progress.append({"task": "gc", "id": tid, "op": "done"})
         self.progress.compact_if_idle()
         self.gc_runs += 1
+        self._queue_peer_prune()
+
+    # ------------------------------------------------------------------
+    # peer-replica pruning: peer memory tracks the live chain
+    # ------------------------------------------------------------------
+    def _queue_peer_prune(self) -> None:
+        if getattr(self.store.backend, "prune_replicas", None) is not None:
+            self.request_peer_prune()
+
+    def _run_peer_prune(self) -> None:
+        prune = getattr(self.store.backend, "prune_replicas", None)
+        if prune is None:
+            return
+        # everything the live manifest still references stays; anything
+        # this host replicated that fell out (folded patches, GC'd
+        # chains, dropped quarantine) is deleted from the peers
+        keep = {key for _, key in self.store.scrub_targets()}
+        self.peer_pruned += int(prune(keep))
+        self.peer_prune_runs += 1
 
     # ------------------------------------------------------------------
     # integrity scrub: journaled walk over cold blobs
@@ -416,6 +449,7 @@ class MaintenanceService:
         self.progress.compact_if_idle()
         self.fold_runs += 1
         self.folded_patches += len(patch_keys)
+        self._queue_peer_prune()
 
     # ------------------------------------------------------------------
     # journal-segment merge
@@ -446,6 +480,8 @@ class MaintenanceService:
                 "fold_runs": self.fold_runs,
                 "folded_patches": self.folded_patches,
                 "fold_transient_skips": self.fold_transient_skips,
+                "peer_prune_runs": self.peer_prune_runs,
+                "peer_pruned": self.peer_pruned,
                 "resumed": self.resumed,
                 "error": repr(self.error) if self.error else None,
                 "progress": self.progress.stats()}

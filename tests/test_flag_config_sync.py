@@ -1,0 +1,137 @@
+"""Guard: the train.py flag surface and the declarative config surface
+cannot drift apart.
+
+Every ``--flag`` in :func:`repro.launch.train.build_parser` must either
+be a runtime input (``RUNTIME_FLAGS``) or map to a real config field via
+:data:`repro.core.engine.FLAG_MAP` — and every config field must have a
+flag unless it is on the explicit no-flag allowlist below. Adding a flag
+without a config field (or vice versa) fails this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import pytest
+
+from repro.checkpoint.config import _TIER_FIELDS, StoreConfig, TierSpec
+from repro.core.engine import FLAG_MAP, RUNTIME_FLAGS, EngineConfig
+from repro.launch.train import build_parser
+
+ENGINE_FIELDS = {f.name for f in dataclasses.fields(EngineConfig)}
+STORE_FIELDS = {f.name for f in dataclasses.fields(StoreConfig)}
+TIER_FIELDS = {f.name for f in dataclasses.fields(TierSpec)}
+
+#: config fields deliberately without a CLI flag. Grow this list only
+#: with a reason — anything else missing a flag is a sync failure.
+NO_FLAG_STORE = {
+    "compact_every",      # journal tuning; config-file / API only
+}
+NO_FLAG_TIER = {
+    "kind",               # implied by the flag itself (--backend/--peers)
+    "node_id",            # derived from --host-id in from_legacy
+    "latency_s_per_mb",   # simulation-only knob (benchmarks/tests)
+    "simulate_peers",     # set by from_args for single-process runs
+}
+
+
+def parser_dests():
+    return {a.dest for a in build_parser()._actions if a.dest != "help"}
+
+
+def test_every_flag_is_mapped_or_runtime():
+    unmapped = parser_dests() - RUNTIME_FLAGS - set(FLAG_MAP)
+    assert not unmapped, (
+        f"train.py flags with no FLAG_MAP entry — add them to "
+        f"repro.core.engine.FLAG_MAP (config knob) or RUNTIME_FLAGS "
+        f"(runtime input): {sorted(unmapped)}")
+
+
+def test_every_mapping_has_a_flag():
+    missing = set(FLAG_MAP) - parser_dests()
+    assert not missing, (
+        f"FLAG_MAP entries with no matching train.py flag: "
+        f"{sorted(missing)}")
+
+
+def test_runtime_flags_do_not_overlap_flag_map():
+    both = RUNTIME_FLAGS & set(FLAG_MAP)
+    assert not both, f"flags claimed as both runtime and config: {both}"
+
+
+@pytest.mark.parametrize(
+    "dest,scope,field",
+    [(d, s, f) for d, (s, f) in sorted(FLAG_MAP.items())])
+def test_mapping_targets_a_real_config_field(dest, scope, field):
+    if scope == "engine":
+        assert field in ENGINE_FIELDS, (
+            f"--{dest}: EngineConfig has no field {field!r}")
+    elif scope == "store":
+        assert field in STORE_FIELDS, (
+            f"--{dest}: StoreConfig has no field {field!r}")
+    elif scope.startswith("tier:"):
+        kind = scope.split(":", 1)[1]
+        assert kind in _TIER_FIELDS, f"--{dest}: unknown tier kind {kind!r}"
+        assert field in TIER_FIELDS, (
+            f"--{dest}: TierSpec has no field {field!r}")
+        assert field in _TIER_FIELDS[kind], (
+            f"--{dest}: {field!r} is not a valid knob of tier kind "
+            f"{kind!r}")
+    else:
+        pytest.fail(f"--{dest}: unknown FLAG_MAP scope {scope!r}")
+
+
+def test_every_engine_field_has_a_flag():
+    covered = {f for s, f in FLAG_MAP.values() if s == "engine"}
+    missing = ENGINE_FIELDS - covered - {"store"}
+    assert not missing, (
+        f"EngineConfig fields with no train.py flag: {sorted(missing)}")
+
+
+def test_every_store_field_has_a_flag():
+    covered = {f for s, f in FLAG_MAP.values() if s == "store"}
+    missing = STORE_FIELDS - covered - NO_FLAG_STORE
+    assert not missing, (
+        f"StoreConfig fields with no train.py flag (add a flag or "
+        f"extend NO_FLAG_STORE with a reason): {sorted(missing)}")
+
+
+def test_every_tier_field_has_a_flag():
+    covered = {f for s, f in FLAG_MAP.values() if s.startswith("tier:")}
+    missing = TIER_FIELDS - covered - NO_FLAG_TIER
+    assert not missing, (
+        f"TierSpec fields with no train.py flag (add a flag or extend "
+        f"NO_FLAG_TIER with a reason): {sorted(missing)}")
+
+
+def test_from_args_respects_the_map():
+    """End-to-end: parsed flags land on the mapped config fields."""
+    ns = build_parser().parse_args(
+        ["--strategy", "lowdiff_plus", "--rho", "0.05", "--lr", "0.002",
+         "--ckpt-dir", "/tmp/flagsync", "--backend", "memory",
+         "--memory-capacity-mb", "64", "--eviction", "lru",
+         "--peers", "2", "--peer-domain", "rack1", "--peer-window", "4",
+         "--retention", "3", "--format", "npz", "--maintenance", "on",
+         "--host-id", "hostA"])
+    cfg = EngineConfig.from_args(ns)
+    assert cfg.strategy == "lowdiff_plus"
+    assert cfg.rho == 0.05 and cfg.lr == 0.002
+    assert cfg.maintenance is True
+    sc = cfg.store
+    assert sc.root == "/tmp/flagsync"
+    assert sc.retention_fulls == 3 and sc.fmt == "npz"
+    assert sc.host_id == "hostA"
+    assert [t.kind for t in sc.tiers] == ["peer", "memory", "local"]
+    peer, mem, _ = sc.tiers
+    assert peer.replicas == 2 and peer.domain == "rack1"
+    assert peer.window == 4 and peer.simulate_peers
+    assert mem.capacity_mb == 64 and mem.eviction == "lru"
+
+
+def test_from_args_tolerates_partial_namespace():
+    """Callers with hand-built Namespaces (examples) get defaults for
+    any flag they do not set."""
+    import argparse
+    cfg = EngineConfig.from_args(argparse.Namespace(strategy="lowdiff"))
+    assert cfg.strategy == "lowdiff"
+    assert cfg.store is None
+    assert cfg.full_interval == EngineConfig().full_interval

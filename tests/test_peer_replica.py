@@ -1,0 +1,396 @@
+"""Peer-memory replication tier tests (Checkmate-style).
+
+Covers the subsystem's acceptance criteria:
+  * wire framing round-trips and rejects corruption (checksum) and
+    protocol damage (magic/length) as distinct, retryable errors
+  * replica placement is failure-domain diverse and deterministic
+  * replication is asynchronous with ack tracking, bounded in-flight
+    window, and exponential-backoff retry under injected faults
+  * the socket transport serves real framed requests and surfaces a
+    killed peer as unreachable
+  * killing a host mid-chain recovers bit-identical state on a
+    replacement host from a surviving peer (manifest adoption + chain
+    replay), and a peer-served stale chain can never shadow a newer
+    durable full (source-aware fallback ordering)
+  * the maintenance service prunes peer replicas that are no longer in
+    any live chain
+"""
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (ChecksumError, StoreConfig, TierSpec,
+                              order_fulls)
+from repro.checkpoint import io as cio
+from repro.checkpoint.backends import LocalFSBackend
+from repro.checkpoint.peer import (ACK, DATA, GET, MISS, PUT,
+                                   LoopbackTransport, PeerGroup, PeerHub,
+                                   PeerNode, PeerProtocolError,
+                                   PeerReplicaBackend, PeerServer,
+                                   PeerUnreachableError, SocketTransport,
+                                   decode_message, encode_message, get_hub,
+                                   reset_hub)
+from repro.checkpoint.remote import FaultInjector, RetryExhaustedError
+from repro.core.recovery import load_latest_chain
+from repro.maintenance import MaintenanceService
+
+
+def payload(seed, n=256):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal(n).astype(np.float32),
+            "b": rng.standard_normal(4).astype(np.float32)}
+
+
+def tree_equal(a, b):
+    ka, kb = sorted(a), sorted(b)
+    return ka == kb and all(np.array_equal(np.asarray(a[k]),
+                                           np.asarray(b[k])) for k in ka)
+
+
+# ----------------------------------------------------------------------
+# wire framing
+# ----------------------------------------------------------------------
+
+def test_message_roundtrip():
+    wire = encode_message(PUT, "full_00000001", {"src": "h0"}, b"\x01\x02")
+    kind, key, meta, body = decode_message(wire)
+    assert (kind, key, meta, body) == (PUT, "full_00000001",
+                                       {"src": "h0"}, b"\x01\x02")
+
+
+def test_message_checksum_corruption_detected():
+    wire = bytearray(encode_message(PUT, "k", {}, b"payload"))
+    wire[-10] ^= 0xFF            # damage inside the digest trailer
+    with pytest.raises(ChecksumError):
+        decode_message(bytes(wire))
+    wire2 = bytearray(encode_message(PUT, "k", {}, b"payload"))
+    wire2[len(wire2) // 2] ^= 0xFF   # damage inside the body
+    with pytest.raises(ChecksumError):
+        decode_message(bytes(wire2))
+
+
+def test_message_protocol_damage_detected():
+    with pytest.raises(PeerProtocolError):
+        decode_message(b"short")
+    wire = encode_message(PUT, "k", {}, b"p")
+    with pytest.raises(PeerProtocolError):
+        decode_message(b"XXXXXXXX" + wire[8:])      # bad magic
+    with pytest.raises(PeerProtocolError):
+        decode_message(wire + b"extra")             # length mismatch
+
+
+# ----------------------------------------------------------------------
+# placement
+# ----------------------------------------------------------------------
+
+def test_peer_selection_prefers_foreign_domains():
+    hub = PeerHub("sel")
+    for nid, dom in (("a", "dA"), ("b", "dB"), ("c", "dA"),
+                     ("d", "dC"), ("e", "dB")):
+        hub.ensure(nid, dom)
+    group = PeerGroup("a", "dA", hub=hub)
+    # one per foreign domain first, deterministic order
+    assert group.select(2) == ["b", "d"]
+    # own-domain peers only after every foreign domain is covered
+    assert "c" in group.select(4)
+    # best-effort when asking for more peers than exist
+    assert len(group.select(10)) == 4
+
+
+def test_peer_selection_is_deterministic():
+    hub = PeerHub("det")
+    for nid in ("n3", "n1", "n2"):
+        hub.ensure(nid, "dX")
+    group = PeerGroup("n1", "dX", hub=hub)
+    assert group.select(2) == group.select(2) == ["n2", "n3"]
+
+
+# ----------------------------------------------------------------------
+# loopback replication: acks, retries, faults
+# ----------------------------------------------------------------------
+
+def make_peer_backend(tmp_path, *, replicas=2, faults=None, hubname="t",
+                      zero_copy=False, window=8, max_retries=3):
+    hub = PeerHub(hubname)
+    hub.ensure("self", "d0")
+    hub.ensure("p1", "d1")
+    hub.ensure("p2", "d2")
+    transport = LoopbackTransport(hub, faults=faults, zero_copy=zero_copy)
+    group = PeerGroup("self", "d0", hub=hub)
+    lower = LocalFSBackend(str(tmp_path / "lower"))
+    be = PeerReplicaBackend(lower, transport, group, replicas=replicas,
+                            window=window, max_retries=max_retries,
+                            backoff_s=0.001, backoff_max_s=0.01)
+    return be, hub
+
+
+@pytest.mark.parametrize("zero_copy", [False, True])
+def test_put_replicates_to_k_peers(tmp_path, zero_copy):
+    be, hub = make_peer_backend(tmp_path, zero_copy=zero_copy)
+    obj = payload(1)
+    be.put("full_00000001", obj)
+    be.flush()
+    assert be.ack_count("full_00000001") == 2
+    for nid in ("p1", "p2"):
+        cat = hub.node(nid).catalog()
+        assert "full_00000001" in cat
+        assert cat["full_00000001"]["src"] == "self"
+    assert be.unreplicated_keys() == []
+    be.close()
+
+
+@pytest.mark.parametrize("zero_copy", [False, True])
+def test_get_falls_back_to_peer_after_local_loss(tmp_path, zero_copy):
+    be, _ = make_peer_backend(tmp_path, zero_copy=zero_copy)
+    obj = payload(2)
+    be.put("diff_00000003", obj)
+    be.flush()
+    be.lower.delete("diff_00000003")     # simulate local data loss
+    got = be.get("diff_00000003")
+    assert tree_equal(got, obj)
+    assert be.stats()["peer_reads"] == 1
+    be.close()
+
+
+def test_transient_fault_is_retried(tmp_path):
+    faults = FaultInjector(drop_puts=1)
+    be, _ = make_peer_backend(tmp_path, faults=faults)
+    be.put("full_00000001", payload(3))
+    be.flush()
+    st = be.stats()
+    assert st["retries"] >= 1
+    assert st["replication_failures"] == 0
+    assert be.ack_count("full_00000001") == 2
+    be.close()
+
+
+def test_dead_peers_count_as_failures_not_errors(tmp_path):
+    be, hub = make_peer_backend(tmp_path)
+    hub.node("p1").kill()
+    hub.node("p2").kill()
+    be.put("full_00000001", payload(4))   # must not raise
+    be.flush()
+    st = be.stats()
+    assert st["replication_failures"] == 2
+    assert be.ack_count("full_00000001") == 0
+    assert be.unreplicated_keys() == ["full_00000001"]
+    be.close()
+
+
+def test_inline_zero_copy_failure_falls_back_to_async_retry(tmp_path):
+    faults = FaultInjector(drop_puts=1)
+    be, _ = make_peer_backend(tmp_path, faults=faults, zero_copy=True)
+    be.put("full_00000001", payload(5))
+    be.flush()
+    st = be.stats()
+    assert st["replication_failures"] == 0
+    assert be.ack_count("full_00000001") == 2
+    be.close()
+
+
+def test_patch_forwarded_to_peer_replicas(tmp_path):
+    be, hub = make_peer_backend(tmp_path)
+    obj = payload(6)
+    be.put("full_00000001", obj)
+    be.flush()
+    new_w = np.full_like(obj["w"], 7.5)
+    # frame payload names follow pack order: dict {"b","w"} -> b=a0, w=a1
+    tree, arrays = cio.pack(obj)
+    idx = [i for i, a in enumerate(arrays) if a.shape == obj["w"].shape][0]
+    be.patch("full_00000001", {f"a{idx}": new_w})
+    be.flush()
+    got = be.get("full_00000001")
+    assert np.array_equal(np.asarray(got["w"]), new_w)
+    be.lower.delete("full_00000001")
+    from_peer = be.get("full_00000001")
+    assert np.array_equal(np.asarray(from_peer["w"]), new_w)
+    be.close()
+
+
+def test_delete_broadcast_prunes_replicas(tmp_path):
+    be, hub = make_peer_backend(tmp_path)
+    be.put("diff_00000001", payload(7))
+    be.flush()
+    be.delete("diff_00000001")
+    be.flush()
+    for nid in ("p1", "p2"):
+        assert "diff_00000001" not in hub.node(nid).catalog()
+    assert be.ack_count("diff_00000001") == 0
+    be.close()
+
+
+# ----------------------------------------------------------------------
+# socket transport
+# ----------------------------------------------------------------------
+
+def test_socket_transport_roundtrip():
+    node = PeerNode("srv", "d1")
+    server = PeerServer(node)
+    try:
+        transport = SocketTransport({"srv": server.address}, timeout_s=5.0)
+        obj = payload(8)
+        blob = cio.frame_dumps(obj)
+        rk, _, rmeta, _ = transport.request(
+            "srv", PUT, "full_00000001",
+            {"src": "h0", "nbytes": len(blob)}, blob)
+        assert rk == ACK and rmeta["node"] == "srv"
+        rk, _, _, body = transport.request("srv", GET, "full_00000001",
+                                           {"src": "h0"}, b"")
+        assert rk == DATA
+        assert tree_equal(cio.frame_loads(body), obj)
+        rk, _, _, _ = transport.request("srv", GET, "missing",
+                                        {"src": "h0"}, b"")
+        assert rk == MISS
+        transport.close()
+    finally:
+        server.close()
+
+
+def test_socket_transport_killed_peer_unreachable():
+    node = PeerNode("srv", "d1")
+    server = PeerServer(node)
+    try:
+        transport = SocketTransport({"srv": server.address}, timeout_s=2.0)
+        node.kill()
+        with pytest.raises(PeerUnreachableError):
+            transport.request("srv", PUT, "k", {"src": "h0"}, b"x")
+        with pytest.raises(PeerUnreachableError):
+            transport.request("unknown", PUT, "k", {"src": "h0"}, b"x")
+        transport.close()
+    finally:
+        server.close()
+
+
+# ----------------------------------------------------------------------
+# host failure -> recovery from a surviving peer
+# ----------------------------------------------------------------------
+
+def peer_store(root, hubname, node, *, replicas=2):
+    return StoreConfig(str(root), tiers=[
+        TierSpec("peer", replicas=replicas, hub=hubname, node_id=node,
+                 domain=f"dom_{node}", simulate_peers=True),
+        TierSpec("local"),
+    ], host_id=node).build()
+
+
+def test_kill_host_mid_chain_recovers_bit_identical_from_peer(tmp_path):
+    reset_hub("crash1")
+    store = peer_store(tmp_path / "a", "crash1", "hostA")
+    store.save_full(0, payload(10))
+    for step in range(1, 6):
+        store.save_diff(step, payload(100 + step))
+    store.backend.flush()
+    control_state, control_diffs = load_latest_chain(store)
+
+    # host A dies: process gone, local storage gone, node out of the hub
+    store.close()
+    get_hub("crash1").remove("hostA")
+    shutil.rmtree(tmp_path / "a")
+
+    # replacement host joins the hub with an empty store and adopts the
+    # dead host's manifest from the surviving peers
+    store2 = peer_store(tmp_path / "b", "crash1", "hostB")
+    adopted = store2.adopt_peer_manifest()
+    assert adopted == 6
+    state, diffs = load_latest_chain(store2)
+    assert tree_equal(state, control_state)
+    assert [s for s, _ in diffs] == [s for s, _ in control_diffs]
+    for (_, got), (_, want) in zip(diffs, control_diffs):
+        assert tree_equal(got, want)
+    # adopted entries are provenance-tagged as peer-served
+    assert all(e.get("tier") == "peer"
+               for e in store2.manifest["fulls"] + store2.manifest["diffs"])
+    store2.close()
+
+
+def test_journal_records_replicated_and_deduped_across_peers(tmp_path):
+    reset_hub("crash2")
+    store = peer_store(tmp_path / "a", "crash2", "hostA")
+    store.save_full(0, payload(11))
+    store.save_diff(1, payload(12))
+    store.backend.flush()
+    manifest = store.backend.peer_manifest()
+    # records collected from BOTH replicas but deduped by (src, rseq)
+    assert len(manifest) == 2
+    assert [r["op"] for _, _, r in manifest] == ["add", "add"]
+    assert all(src == "hostA" for src, _, _ in manifest)
+    store.close()
+
+
+def test_adoption_never_shadows_newer_durable_full(tmp_path):
+    """A stale peer-served chain must lose to a newer durable full."""
+    reset_hub("crash3")
+    # host A replicates a chain whose newest full is step 2
+    store_a = peer_store(tmp_path / "a", "crash3", "hostA")
+    store_a.save_full(2, payload(20))
+    store_a.backend.flush()
+    store_a.close()
+    get_hub("crash3").remove("hostA")
+
+    # host B already has a DURABLE full representing newer state
+    store_b = peer_store(tmp_path / "b", "crash3", "hostB")
+    newer = payload(21)
+    store_b.save_full(1, newer)     # lower nominal step ...
+    store_b.manifest["fulls"][-1]["state_step"] = 9  # ... newer state
+    adopted = store_b.adopt_peer_manifest()
+    assert adopted >= 1             # the foreign entry IS adopted ...
+    state, diffs = load_latest_chain(store_b)
+    assert tree_equal(state, newer)  # ... but cannot shadow the durable
+    store_b.close()
+
+
+def test_order_fulls_ranks_state_then_step_then_durability():
+    durable = {"step": 1, "state_step": 9, "path": "full_a.ckpt"}
+    peer = {"step": 2, "state_step": 2, "path": "full_b.ckpt",
+            "tier": "peer"}
+    tie_peer = {"step": 3, "state_step": 9, "path": "full_c.ckpt",
+                "tier": "peer"}
+    # highest state wins regardless of nominal step or tier
+    assert order_fulls([peer, durable])[0] is durable
+    # on a state tie at the same step... different steps: higher step
+    assert order_fulls([durable, tie_peer])[0] is tie_peer
+    # exact tie on (state_step, step): durable (untagged) outranks peer
+    dup = {"step": 3, "state_step": 9, "path": "full_d.ckpt"}
+    assert order_fulls([tie_peer, dup])[0] is dup
+
+
+# ----------------------------------------------------------------------
+# maintenance integration
+# ----------------------------------------------------------------------
+
+def test_maintenance_prunes_folded_peer_replicas(tmp_path):
+    reset_hub("prune1")
+    store = peer_store(tmp_path / "a", "prune1", "hostA")
+    svc = MaintenanceService(store, gc_slice=8)
+    store.attach_maintenance(svc)
+    svc.start()
+    store.save_full(0, payload(30))
+    for step in range(1, 4):
+        store.save_diff(step, payload(30 + step))
+    store.backend.flush()
+    assert len(store.backend.peer_catalog()) == 4
+    # GC to one retained chain: the old differentials leave the
+    # manifest, and the peer-prune pass drops their replicas too
+    store.save_full(4, payload(34))
+    store.backend.flush()
+    svc.request_gc(1)
+    svc.drain(30.0)
+    live = {key for _, key in store.scrub_targets()}
+    assert set(store.backend.peer_catalog()) == live
+    assert svc.stats()["peer_prune_runs"] >= 1
+    store.close()
+
+
+def test_peer_prune_keeps_live_chain(tmp_path):
+    reset_hub("prune2")
+    store = peer_store(tmp_path / "a", "prune2", "hostA")
+    store.save_full(0, payload(40))
+    store.save_diff(1, payload(41))
+    store.backend.flush()
+    # nothing is dead: pruning must delete nothing
+    pruned = store.backend.prune_replicas(
+        {key for _, key in store.scrub_targets()})
+    assert pruned == 0
+    assert len(store.backend.peer_catalog()) == 2
+    store.close()
