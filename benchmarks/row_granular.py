@@ -1,0 +1,182 @@
+"""Exp. 16: row-granular differential persistence.
+
+Three measurements on a synthetic MoE-style workload (one big expert
+table, ~1% of rows dirty per persist interval — what expert-parallel
+routing leaves on each host):
+
+* **bytes written per persist** — leaf-granular dirty tracking (the
+  whole table re-persists whenever any row moved) vs row-granular
+  spans. The headline number: row granularity must write >= 5x fewer
+  bytes/persist at ~1% dirty rows (CI asserts this from the smoke
+  artifact; on this workload the real gap is ~2 orders of magnitude).
+* **fold cost vs patch count** — ``fold_sync`` wall time over chains
+  of 64 / 256 / 1024 single-row patches: the newest-wins span merge
+  keeps fold work proportional to *distinct dirty rows*, not to chain
+  length times leaf size.
+* **adaptive vs fixed fold trigger** — the same bursty workload driven
+  once with the fixed ``--fold-interval`` cap alone and once with the
+  ``--fold-amplification`` trigger layered on: the adaptive run folds
+  when the chain is actually expensive to read, bounding worst-case
+  recovery read amplification instead of patch count.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint.config import StoreConfig
+from repro.core.lowdiff_plus import _NumpyAdam, fold_due
+
+ROWS = 8192               # expert-table rows
+DM = 32                   # 1 MiB fp32 per component (params/mu/nu)
+HOT_BLOCKS = 8            # dirty spans per interval...
+BLOCK = 10                # ...of this many rows: ~1% of ROWS
+PERSISTS = 4
+
+
+def make_replica(granularity):
+    rng = np.random.default_rng(0)
+    params = {"table": (0.1 * rng.standard_normal(
+        (ROWS, DM))).astype(np.float32)}
+    mu = {k: np.zeros_like(v) for k, v in params.items()}
+    nu = {k: np.zeros_like(v) for k, v in params.items()}
+    return _NumpyAdam(params, mu, nu, 0, lr=1e-3, track_dirty=True,
+                      dirty_granularity=granularity)
+
+
+def sparse_row_grads(rep, seed):
+    """~1% of rows nonzero, in HOT_BLOCKS random contiguous blocks."""
+    rng = np.random.default_rng(seed)
+    g = np.zeros((ROWS, DM), np.float32)
+    for start in rng.integers(0, ROWS - BLOCK, HOT_BLOCKS):
+        g[start:start + BLOCK] = rng.standard_normal(
+            (BLOCK, DM)).astype(np.float32)
+    return {"table": g}
+
+
+def bench_bytes(out, tmp):
+    per_mode = {}
+    for mode in ("leaf", "row"):
+        store = StoreConfig.from_legacy(f"{tmp}/{mode}").build()
+        rep = make_replica(mode)
+        rep.apply(sparse_row_grads(rep, 0))
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        base_bytes = store.bytes_written
+        t_persist = []
+        for step in range(2, PERSISTS + 2):
+            rep.apply(sparse_row_grads(rep, step))
+            updates, _ = rep.snapshot_dirty()
+            t0 = time.perf_counter()
+            store.save_patch(step, base, updates)
+            t_persist.append(time.perf_counter() - t0)
+        per_mode[mode] = (store.bytes_written - base_bytes) / PERSISTS
+        out(row(f"exp16_{mode}_persist_bytes", 0.0,
+                f"{per_mode[mode] / 1e6:.3f}MB"))
+        out(row(f"exp16_{mode}_persist_latency",
+                float(np.median(t_persist))))
+        # either chain must recover the exact replica bytes
+        got, _ = store.load_latest_state()
+        np.testing.assert_array_equal(got["params"]["table"],
+                                      rep.params["table"])
+        store.close()
+    ratio = per_mode["leaf"] / max(per_mode["row"], 1.0)
+    out(row("exp16_bytes_ratio_leaf_over_row", 0.0, f"x{ratio:.1f}"))
+    return ratio
+
+
+def bench_fold_cost(out, tmp):
+    """Fold wall time vs chain length at one dirty row per patch
+    (hand-built RowUpdates: a replica's Adam moments keep re-dirtying
+    every touched row, which measures the optimizer, not the fold)."""
+    from repro.checkpoint.patchset import Span, row_update_from_spans
+    rng = np.random.default_rng(1)
+    for n_patches in (64, 256, 1024):
+        store = StoreConfig.from_legacy(f"{tmp}/fold_{n_patches}").build()
+        rep = make_replica("row")
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        for step in range(2, n_patches + 2):
+            r = int(rng.integers(0, ROWS))
+            data = rng.standard_normal((1, DM)).astype(np.float32)
+            upd = {"params": {"table": row_update_from_spans(
+                       [Span(r, data)], (ROWS, DM))},
+                   "count": np.array(step, np.int64)}
+            store.save_patch(step, base, upd)
+        t0 = time.perf_counter()
+        folded = store.fold_sync(merge_slice=8)
+        t = time.perf_counter() - t0
+        assert folded == n_patches
+        out(row(f"exp16_fold_patches_{n_patches:04d}", t))
+        store.close()
+
+
+def bench_adaptive_trigger(out, tmp):
+    """Bursty chain growth under the fixed patch-count cap alone vs
+    with the amplification trigger layered on: the adaptive policy
+    bounds how expensive the chain is allowed to get to read."""
+    policies = {"fixed": 0.0, "adaptive": 1.5}
+    for name, fold_amp in policies.items():
+        store = StoreConfig.from_legacy(f"{tmp}/trig_{name}").build()
+        rep = make_replica("row")
+        rep.apply(sparse_row_grads(rep, 0))
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        rng = np.random.default_rng(2)
+        folds, since, worst_amp = 0, 0, 0.0
+        for step in range(2, 34):
+            # bursty: every 4th interval dirties 30% of the table
+            if step % 4 == 0:
+                g = {"table": rng.standard_normal(
+                    (ROWS, DM)).astype(np.float32)
+                    * (rng.random((ROWS, 1)) < 0.3)}
+            else:
+                g = sparse_row_grads(rep, step)
+            rep.apply(g)
+            updates, _ = rep.snapshot_dirty()
+            store.save_patch(step, base, updates)
+            since += 1
+            amp = store.chain_amplification()
+            worst_amp = max(worst_amp, amp)
+            if fold_due(since, 16, amp, fold_amp):
+                store.fold_sync(merge_slice=8)
+                base = store._entry_key(store.latest_full())
+                folds, since = folds + 1, 0
+        out(row(f"exp16_{name}_trigger", 0.0,
+                f"{folds} folds max_amp x{worst_amp:.2f}"))
+        store.close()
+
+
+def bench_recovery(out, tmp):
+    store = StoreConfig.from_legacy(f"{tmp}/rec").build()
+    rep = make_replica("row")
+    rep.apply(sparse_row_grads(rep, 0))
+    base = store.save_full(1, rep.snapshot_full(), record_names=True)
+    for step in range(2, 18):
+        rep.apply(sparse_row_grads(rep, step))
+        updates, _ = rep.snapshot_dirty()
+        store.save_patch(step, base, updates)
+    t = timeit(lambda: store.load_latest_state(), warmup=1, iters=3)
+    out(row("exp16_recovery_row_chain_16", t))
+    store.close()
+
+
+def main(out=print):
+    tmp = tempfile.mkdtemp(prefix="exp16_")
+    try:
+        ratio = bench_bytes(out, tmp)
+        bench_fold_cost(out, tmp)
+        bench_adaptive_trigger(out, tmp)
+        bench_recovery(out, tmp)
+        if ratio < 5.0:
+            raise AssertionError(
+                f"row-granular persist regression: only {ratio:.1f}x fewer "
+                f"bytes than leaf granularity at ~1% dirty rows "
+                f"(acceptance bar: 5x)")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,7 @@ MODULES = [
     ("exp13_maintenance", "benchmarks.maintenance"),
     ("exp14_incremental_persist", "benchmarks.incremental_persist"),
     ("exp15_peer_replica", "benchmarks.peer_replica"),
+    ("exp16_row_granular", "benchmarks.row_granular"),
 ]
 
 

@@ -29,6 +29,9 @@ from repro.checkpoint.io import FORMATS, FrameCorruptionError
 from repro.checkpoint.journal import (JournalSegment, JournalTap,
                                       ManifestJournal,
                                       SegmentedManifestJournal)
+from repro.checkpoint.patchset import (PatchSet, RowUpdate, Span,
+                                       mask_to_intervals, merge_span_chain,
+                                       row_update_from_spans)
 from repro.checkpoint.peer import (LoopbackTransport, PeerGroup, PeerHub,
                                    PeerInfo, PeerNode, PeerReplicaBackend,
                                    PeerServer, PeerUnreachableError,
@@ -46,15 +49,16 @@ __all__ = ["BACKENDS", "FORMATS", "CheckpointStore", "ChecksumError",
            "FakeObjectStore", "FaultInjector", "FilesystemObjectStore",
            "FrameCorruptionError", "JournalSegment", "JournalTap",
            "LocalFSBackend", "LoopbackTransport", "ManifestJournal",
-           "MemoryTierBackend", "ObjectStore", "PeerGroup", "PeerHub",
-           "PeerInfo", "PeerNode", "PeerReplicaBackend", "PeerServer",
-           "PeerUnreachableError", "RemoteObjectBackend",
-           "RetryExhaustedError", "SegmentedManifestJournal",
-           "ShardedBackend", "SocketTransport", "StorageBackend",
+           "MemoryTierBackend", "ObjectStore", "PatchSet", "PeerGroup",
+           "PeerHub", "PeerInfo", "PeerNode", "PeerReplicaBackend",
+           "PeerServer", "PeerUnreachableError", "RemoteObjectBackend",
+           "RetryExhaustedError", "RowUpdate", "SegmentedManifestJournal",
+           "ShardedBackend", "SocketTransport", "Span", "StorageBackend",
            "StoreConfig", "StoreConfigError", "TierSpec",
            "TransientStoreError", "Transport", "get_hub", "make_backend",
            "make_pspec_splitter", "make_remote_backend", "make_store",
-           "order_fulls", "reset_hub"]
+           "mask_to_intervals", "merge_span_chain", "order_fulls",
+           "reset_hub", "row_update_from_spans"]
 
 
 def make_store(root: Optional[str], *, backend: str = "local",

@@ -34,6 +34,15 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint import io as cio
+from repro.checkpoint.patchset import PatchSet
+
+
+def split_sizes(extent: int, parts: int) -> List[int]:
+    """Piece sizes ``np.array_split(a, parts)`` produces along an axis of
+    ``extent`` — the boundary math backends need to re-split a row range
+    per shard placement without materializing the full leaf."""
+    base, rem = divmod(int(extent), int(parts))
+    return [base + 1 if i < rem else base for i in range(parts)]
 
 
 class StorageBackend(abc.ABC):
@@ -80,16 +89,19 @@ class StorageBackend(abc.ABC):
         """Human-readable locator for manifest entries / logs."""
         return f"{self.name}://{key}"
 
-    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
+    def patch(self, key: str, patch: PatchSet) -> int:
         """In-place partial update of a stored frame blob: overwrite the
-        named payload leaves (``a0..aN``, same dtype/shape — the layout
-        never moves) at their recorded offsets and refresh the header
-        checksums, instead of re-writing the whole blob. The
-        incremental-merging persistence engine's fold step calls this
-        with exactly the leaves a patch chain dirtied, so fold I/O is
-        O(changed bytes), not O(model). Returns bytes written. Backends
-        that cannot patch raise ``NotImplementedError``; npz blobs are
-        rejected with ``ValueError`` (zip members cannot be pwritten)."""
+        patched row ranges of the named payload leaves (``a0..aN``, same
+        dtype and tail shape — the layout never moves) at their recorded
+        offsets and refresh the header checksums, instead of re-writing
+        the whole blob. ``patch`` is a :class:`PatchSet` (implementations
+        coerce, so legacy ``{name: whole_array}`` dicts keep working).
+        The incremental-merging persistence engine's fold step calls
+        this with exactly the row ranges a patch chain dirtied, so fold
+        I/O is O(changed bytes), not O(model). Returns bytes written.
+        Backends that cannot patch raise ``NotImplementedError``; npz
+        blobs are rejected with ``ValueError`` (zip members cannot be
+        pwritten)."""
         raise NotImplementedError(
             f"{self.name} backend cannot patch blobs in place")
 
@@ -193,7 +205,7 @@ class LocalFSBackend(StorageBackend):
             raise FileNotFoundError(f"no blob {key!r} in {self.root}")
         return cio.load_any(path, mmap=self.mmap_reads)
 
-    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
+    def patch(self, key: str, patch: PatchSet) -> int:
         path = self._find(key)
         if path is None:
             raise FileNotFoundError(f"no blob {key!r} in {self.root}")
@@ -201,7 +213,7 @@ class LocalFSBackend(StorageBackend):
             raise ValueError(
                 f"cannot patch npz blob {key!r} in place; incremental "
                 f"persistence requires the frame format")
-        return cio.patch_frame(path, updates)
+        return cio.patch_frame(path, PatchSet.coerce(patch))
 
     def delete(self, key: str) -> None:
         for fmt in self.SUFFIXES:
@@ -461,34 +473,47 @@ class MemoryTierBackend(StorageBackend):
             return self.lower.get(key)
         raise FileNotFoundError(f"memory tier has no blob {key!r}")
 
-    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
-        """Patch the resident packed arrays in place (the tier must
-        still own its bytes, so the new leaves are copied) and forward
+    def patch(self, key: str, patch: PatchSet) -> int:
+        """Patch the resident packed arrays in place — whole-leaf spans
+        replace the array (copied; the tier must still own its bytes),
+        row spans are spliced into the resident buffer — and forward
         the patch to the lower tier through the same FIFO write-back
         worker — it lands strictly after the base blob's own
         write-back, so the tiers never diverge."""
+        ps = PatchSet.coerce(patch)
         self._prune_done()
         n = 0
         with self._lock:
             item = self._mem.get(key)
             if item is not None:
                 _, arrays, _ = item
-                for name, arr in updates.items():
+                for name in ps:
                     i = int(name[1:])
-                    a = np.asarray(arr)
-                    if (arrays[i].dtype != a.dtype
-                            or arrays[i].shape != a.shape):
-                        raise ValueError(
-                            f"leaf {name!r} layout mismatch on {key!r}: "
-                            f"{a.dtype}{a.shape} != "
-                            f"{arrays[i].dtype}{arrays[i].shape}")
-                    arrays[i] = np.array(a)
-                    n += int(a.nbytes)
+                    base = arrays[i]
+                    for sp in ps[name]:
+                        a = np.asarray(sp.data)
+                        whole = sp.start == 0 and a.shape == base.shape
+                        if base.dtype != a.dtype or not (
+                                whole or (base.ndim >= 1 and a.ndim >= 1
+                                          and a.shape[1:] == base.shape[1:]
+                                          and sp.stop <= base.shape[0])):
+                            raise ValueError(
+                                f"leaf {name!r} layout mismatch on "
+                                f"{key!r}: rows [{sp.start}, {sp.stop}) "
+                                f"of {a.dtype}{a.shape} != "
+                                f"{base.dtype}{base.shape}")
+                        if whole:
+                            arrays[i] = base = np.array(a)
+                        else:
+                            if not base.flags.writeable:
+                                base = np.array(base)
+                                arrays[i] = base
+                            base[sp.start:sp.stop] = a
+                        n += int(a.nbytes)
         if item is None and self.lower is None:
             raise FileNotFoundError(f"memory tier has no blob {key!r}")
         if self._writeback is not None:
-            snap = {name: np.array(np.asarray(v))
-                    for name, v in updates.items()}
+            snap = ps.copy()
             # replacing a still-pending future for this key would lose
             # its eventual error (patches, unlike re-puts, are not
             # self-healing): collect the predecessor's outcome inside
@@ -506,7 +531,7 @@ class MemoryTierBackend(StorageBackend):
             self._inflight[key] = self._writeback.submit(run)
             self.spills += 1
             if item is None:
-                n = sum(int(a.nbytes) for a in snap.values())
+                n = snap.nbytes
         return n
 
     def delete(self, key: str) -> None:
@@ -795,12 +820,14 @@ class ShardedBackend(StorageBackend):
                 arrays.append(np.concatenate(pieces, axis=pl["axis"]))
         return cio.unpack(meta["struct"], arrays)
 
-    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
-        """Patch a sharded blob leaf-wise: split each updated leaf
-        exactly as ``put`` placed it (same axis, same ``array_split``)
-        and pwrite the pieces into their shard frames concurrently.
-        The meta file never changes — placements and sizes are
-        invariant under an in-place patch."""
+    def patch(self, key: str, patch: PatchSet) -> int:
+        """Patch a sharded blob range-wise: re-split each span exactly
+        as ``put`` placed its leaf (same axis, same ``array_split``
+        boundaries) and pwrite the intersecting pieces into their shard
+        frames concurrently — a row range touching one shard's slice
+        writes only that shard. The meta file never changes —
+        placements and sizes are invariant under an in-place patch."""
+        ps = PatchSet.coerce(patch)
         try:
             with open(self._meta_path(key), encoding="utf-8") as f:
                 meta = json.load(f)
@@ -810,24 +837,52 @@ class ShardedBackend(StorageBackend):
             raise ValueError(
                 f"cannot patch npz shards of {key!r} in place; "
                 f"incremental persistence requires the frame format")
-        per_shard: Dict[int, Dict[str, np.ndarray]] = {}
-        for name, arr in updates.items():
+        parts = int(meta["num_shards"])
+        per_shard: Dict[int, PatchSet] = {}
+        for name in ps:
             i = int(name[1:])
             pl = meta["placements"][i]
-            a = np.asarray(arr)
+            shape = ps.shape_of(name)
             if pl["kind"] == "whole":
-                per_shard.setdefault(pl["shard"], {})[name] = a
-            else:
-                pieces = np.array_split(a, meta["num_shards"],
-                                        axis=pl["axis"])
-                for k, piece in enumerate(pieces):
-                    per_shard.setdefault(k, {})[name] = piece
+                tgt = per_shard.setdefault(pl["shard"], PatchSet())
+                for sp in ps[name]:
+                    tgt.add(name, sp.start, sp.data, shape)
+                continue
+            axis = int(pl["axis"])
+            sizes = split_sizes(shape[axis], parts)
+            bounds = np.cumsum([0] + sizes).tolist()
+            for sp in ps[name]:
+                a = np.asarray(sp.data)
+                for k in range(parts):
+                    lo, hi = int(bounds[k]), int(bounds[k + 1])
+                    if lo == hi:
+                        continue
+                    if axis == 0:
+                        # the split axis is the span axis: intersect the
+                        # row range with this shard's slice
+                        s, e = max(sp.start, lo), min(sp.stop, hi)
+                        if s >= e:
+                            continue
+                        piece_shape = (sizes[k],) + tuple(shape[1:])
+                        per_shard.setdefault(k, PatchSet()).add(
+                            name, s - lo, a[s - sp.start:e - sp.start],
+                            piece_shape)
+                    else:
+                        # split along a tail axis: every shard holds all
+                        # rows, so the span start carries over and only
+                        # the tail columns are sliced
+                        sel = [slice(None)] * a.ndim
+                        sel[axis] = slice(lo, hi)
+                        piece_shape = tuple(
+                            hi - lo if d == axis else shape[d]
+                            for d in range(len(shape)))
+                        per_shard.setdefault(k, PatchSet()).add(
+                            name, sp.start, a[tuple(sel)], piece_shape)
         futs = {k: self._pool.submit(self._patch_shard, k, key, upd)
                 for k, upd in per_shard.items()}
         return sum(f.result() for f in futs.values())
 
-    def _patch_shard(self, k: int, key: str,
-                     updates: Dict[str, np.ndarray]) -> int:
+    def _patch_shard(self, k: int, key: str, updates: PatchSet) -> int:
         return cio.patch_frame(self._find_shard(k, key), updates)
 
     def delete(self, key: str) -> None:

@@ -41,6 +41,7 @@ import jax
 import ml_dtypes
 import numpy as np
 
+from repro.checkpoint.patchset import PatchSet, RowUpdate
 from repro.compression.packed import PackedDiff
 from repro.compression.quant import QuantGrad
 from repro.compression.sparse import SparseGrad
@@ -67,6 +68,9 @@ def _register_builtin():
 
 
 _register_builtin()
+# row-sparse leaf updates inside patch blobs serialize like any other
+# NamedTuple leaf container
+register_namedtuple(RowUpdate)
 
 
 class FrameCorruptionError(ValueError):
@@ -455,10 +459,12 @@ def frame_dumps(obj: Any) -> bytes:
 
 
 #: test seam: callable(point: str) fired at named points inside
-#: :func:`patch_frame` — "patch:mid_data" (after the first leaf pwrite,
-#: before the rest), "patch:pre_header" (data fsync'd, header still
-#: old) and "patch:mid_header" (half the header bytes rewritten).
-#: Raising from the hook simulates a kill at exactly that point.
+#: :func:`patch_frame` — "patch:mid_span" (after the first row-range
+#: pwrite when more spans remain), "patch:mid_data" (after the first
+#: leaf's spans are fully written, before the rest), "patch:pre_header"
+#: (data fsync'd, header still old) and "patch:mid_header" (half the
+#: header bytes rewritten). Raising from the hook simulates a kill at
+#: exactly that point.
 _PATCH_CRASH_HOOK = None
 
 
@@ -467,21 +473,28 @@ def set_patch_crash_hook(hook) -> None:
     _PATCH_CRASH_HOOK = hook
 
 
-def patch_frame(path: str, updates: Dict[str, np.ndarray]) -> int:
-    """In-place partial rewrite of a frame file: overwrite the named
-    leaves' buffers at their recorded offsets (dtype/shape/nbytes must
-    match — the layout never moves), then rewrite the header with the
-    new sha256s. Write order is the crash-consistency contract:
+def patch_frame(path: str, updates) -> int:
+    """In-place partial rewrite of a frame file: overwrite the patched
+    row ranges at ``leaf_offset + row_start * row_stride`` (the 64-byte-
+    aligned layout never moves, so a span lands exactly on the rows it
+    replaces), then rewrite the header with the new sha256s. ``updates``
+    is anything :meth:`PatchSet.coerce` accepts — a :class:`PatchSet`
+    or the legacy ``{name: whole_array}`` dict. Write order is the
+    crash-consistency contract:
 
-    1. leaf buffers are pwritten and fsync'd *first*;
-    2. the header (same byte length — a sha256 hex digest is fixed
+    1. span buffers are pwritten and fsync'd *first*;
+    2. each patched leaf's sha256 is recomputed over the patched region
+       *plus* the retained spans (read back for partially-patched
+       leaves);
+    3. the header (same byte length — a sha256 hex digest is fixed
        width) is rewritten *last*.
 
-    A crash at any point leaves a frame whose patched leaves may hold
+    A crash at any point leaves a frame whose patched ranges may hold
     torn bytes or stale digests — which is why callers journal each
     patch as a durable blob *before* folding it in: recovery replays
-    the patch chain over the base, overwriting exactly the leaves a
+    the patch chain over the base, overwriting exactly the ranges a
     partial patch could have torn. Returns bytes written."""
+    patch = PatchSet.coerce(updates)
     hook = _PATCH_CRASH_HOOK
     magic_len = len(FRAME_MAGIC)
     with open(path, "r+b") as f:
@@ -499,24 +512,59 @@ def patch_frame(path: str, updates: Dict[str, np.ndarray]) -> int:
         data_start = pre + (-pre) % FRAME_ALIGN
         by_name = {leaf["name"]: leaf for leaf in header["leaves"]}
         written = 0
+        total_spans = patch.span_count
+        spans_done = 0
+        fired_span = False
         fired_mid = False
-        for name in sorted(updates):
+        for name in patch:
             rec = by_name.get(name)
             if rec is None:
                 raise ValueError(f"{path}: frame has no leaf {name!r}")
-            a = np.asarray(updates[name])
-            if a.dtype.str != rec["dtype"] or list(a.shape) != rec["shape"]:
+            rshape = tuple(rec["shape"])
+            rows = rshape[0] if rshape else 1
+            stride = int(rec["nbytes"]) // rows if rows else 0
+            whole = patch.is_whole(name)
+            if whole and list(patch.shape_of(name)) != list(rec["shape"]):
                 raise ValueError(
                     f"{path}: leaf {name!r} layout mismatch "
-                    f"({a.dtype.str}{a.shape} != "
-                    f"{rec['dtype']}{tuple(rec['shape'])}); in-place "
-                    f"patching never moves the frame layout")
-            a = a if a.flags.c_contiguous else np.ascontiguousarray(a)
-            view = _byte_view(a)
-            f.seek(data_start + rec["offset"])
-            f.write(view)
-            rec["sha256"] = hashlib.sha256(view).hexdigest()
-            written += int(a.nbytes)
+                    f"({patch.shape_of(name)} != {tuple(rec['shape'])}); "
+                    f"in-place patching never moves the frame layout")
+            view = b""
+            for sp in patch[name]:
+                a = np.asarray(sp.data)
+                span_rows = int(a.shape[0]) if a.ndim else 1
+                if a.dtype.str != rec["dtype"] or (
+                        (sp.start != 0 or list(a.shape) != rec["shape"])
+                        and (not rshape or a.ndim == 0
+                             or a.shape[1:] != rshape[1:]
+                             or sp.start + span_rows > rows)):
+                    raise ValueError(
+                        f"{path}: leaf {name!r} layout mismatch "
+                        f"(rows [{sp.start}, {sp.start + span_rows}) of "
+                        f"{a.dtype.str}{a.shape} != "
+                        f"{rec['dtype']}{rshape}); in-place "
+                        f"patching never moves the frame layout")
+                a = a if a.flags.c_contiguous else np.ascontiguousarray(a)
+                view = _byte_view(a)
+                f.seek(data_start + rec["offset"] + sp.start * stride)
+                f.write(view)
+                written += int(a.nbytes)
+                spans_done += 1
+                if hook is not None and not fired_span \
+                        and spans_done < total_spans:
+                    fired_span = True
+                    f.flush()
+                    os.fsync(f.fileno())
+                    hook("patch:mid_span")
+            if whole:
+                rec["sha256"] = hashlib.sha256(view).hexdigest()
+            else:
+                # partially-patched leaf: digest covers patched + retained
+                # bytes, so read the leaf's full extent back
+                f.flush()
+                f.seek(data_start + rec["offset"])
+                raw = f.read(int(rec["nbytes"]))
+                rec["sha256"] = hashlib.sha256(raw).hexdigest()
             if hook is not None and not fired_mid:
                 fired_mid = True
                 f.flush()

@@ -1,0 +1,382 @@
+"""Typed sub-leaf patch currency for the persistence pipeline.
+
+PR 5's incremental-merging engine moved the unit of change from "the
+whole model" to "the leaves that changed" — but a leaf is still the
+container, not the change: one routed token dirties an entire
+``(n_experts * expert_ff, d_model)`` MoE table, so leaf granularity
+persists ~100x more bytes than actually moved (the regime Check-N-Run's
+row-sparse differentials target). This module is the shared currency
+that drops the unit one more level, to *row ranges*:
+
+* :class:`Span` — one contiguous run of rows (``start`` + the row
+  block's array). A span whose block equals the full leaf shape is the
+  degenerate whole-leaf update, so leaf-granular callers are just the
+  one-span case and every old ``Dict[str, np.ndarray]`` patch coerces
+  losslessly (:meth:`PatchSet.coerce`).
+* :class:`PatchSet` — ``frame leaf name -> ordered disjoint spans``
+  plus each leaf's full shape (sharded backends need the full
+  first-axis extent to re-split ranges with ``np.array_split``
+  boundaries). This is the one type every
+  ``StorageBackend.patch`` implementation accepts — the drifting
+  ``Dict[str, np.ndarray]`` / ``Dict[str, Any]`` signatures unify here.
+* :class:`RowUpdate` — the *serialized* form of a row-sparse leaf
+  inside a patch blob's partial state dict (a registered NamedTuple, so
+  frames and npz round-trip it). ``store.merge_updates`` overlays it
+  onto a base leaf at recovery; ``store.fold_updates`` converts chains
+  of them into a merged :class:`PatchSet`.
+* interval helpers — dirty-mask -> span extraction with adjacent-run
+  coalescing (:func:`mask_to_intervals`) and newest-wins merging of a
+  patch chain's overlapping spans (:func:`merge_span_chain`), both
+  pure-index math shared by the replica tracker and the fold.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, NamedTuple, Optional, Sequence, \
+    Tuple
+
+import numpy as np
+
+
+class Span(NamedTuple):
+    """One contiguous row range of a leaf: rows ``[start, start +
+    len(data))`` along axis 0, ``data.shape[1:]`` matching the leaf's
+    tail. A 0-d / scalar leaf is a single span with ``start == 0``."""
+
+    start: int
+    data: np.ndarray
+
+    @property
+    def rows(self) -> int:
+        d = np.asarray(self.data)
+        return int(d.shape[0]) if d.ndim else 1
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.rows
+
+
+class RowUpdate(NamedTuple):
+    """Row-sparse leaf update inside a patch blob's partial state dict:
+    parallel lists of span starts and row blocks, plus the full leaf
+    shape (recovery validates against the base; the sharded backend
+    needs the full extent to re-split). Registered with the frame codec
+    so patch blobs holding it serialize through every backend."""
+
+    starts: np.ndarray          #: (n,) int64 span start rows
+    rows: list                  #: n arrays, rows[i].shape = (len_i, *tail)
+    shape: tuple                #: full leaf shape
+
+    def spans(self) -> List[Span]:
+        return [Span(int(s), np.asarray(r))
+                for s, r in zip(np.asarray(self.starts).tolist(), self.rows)]
+
+    def extents(self) -> List[List[int]]:
+        return [[sp.start, sp.stop] for sp in self.spans()]
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(np.asarray(r).nbytes for r in self.rows))
+
+
+def row_update_from_spans(spans: Sequence[Span],
+                          shape: Sequence[int]) -> RowUpdate:
+    spans = sorted(spans, key=lambda sp: sp.start)
+    return RowUpdate(
+        starts=np.asarray([sp.start for sp in spans], np.int64),
+        rows=[np.asarray(sp.data) for sp in spans],
+        shape=tuple(int(x) for x in shape))
+
+
+class PatchSet:
+    """Ordered, validated ``frame leaf name -> disjoint row spans``.
+
+    The shared type all five ``StorageBackend.patch`` implementations
+    accept. Supports dict-style iteration/indexing (``for name in ps``,
+    ``ps[name]``) so slicing code can treat it like the legacy updates
+    dict, plus :meth:`subset` for the fold's bounded slices.
+    :meth:`coerce` upgrades legacy whole-leaf dicts in place, so old
+    callers and old patch chains keep working unchanged."""
+
+    def __init__(self) -> None:
+        self._spans: Dict[str, List[Span]] = {}
+        self._shapes: Dict[str, tuple] = {}
+
+    # -- construction --------------------------------------------------
+    def add(self, name: str, start: int, data,
+            shape: Optional[Sequence[int]] = None) -> "PatchSet":
+        """Add one span. ``shape`` is the leaf's *full* shape; omitted
+        only for whole-leaf spans (it is then the data's own shape).
+        Spans of one leaf must be disjoint; inserts keep them sorted."""
+        a = np.asarray(data)
+        start = int(start)
+        if shape is None:
+            if name in self._shapes:
+                shape = self._shapes[name]
+            elif start != 0:
+                raise ValueError(
+                    f"span for {name!r} at row {start} needs the leaf's "
+                    f"full shape (only whole-leaf spans may omit it)")
+            else:
+                shape = a.shape
+        shape = tuple(int(x) for x in shape)
+        if start < 0:
+            raise ValueError(f"span for {name!r}: negative start {start}")
+        if shape:
+            if a.shape[1:] != shape[1:]:
+                raise ValueError(
+                    f"span for {name!r}: tail {a.shape[1:]} != leaf tail "
+                    f"{shape[1:]}")
+            rows = int(a.shape[0]) if a.ndim else 1
+            if start + rows > shape[0]:
+                raise ValueError(
+                    f"span for {name!r}: rows [{start}, {start + rows}) "
+                    f"exceed leaf extent {shape[0]}")
+        else:
+            if start != 0 or a.shape != ():
+                raise ValueError(
+                    f"span for {name!r}: a scalar leaf takes exactly one "
+                    f"whole span")
+        known = self._shapes.get(name)
+        if known is not None and known != shape:
+            raise ValueError(f"leaf {name!r}: conflicting full shapes "
+                             f"{known} and {shape}")
+        self._shapes[name] = shape
+        spans = self._spans.setdefault(name, [])
+        sp = Span(start, a)
+        for other in spans:
+            if sp.start < other.stop and other.start < sp.stop:
+                raise ValueError(
+                    f"leaf {name!r}: span [{sp.start}, {sp.stop}) overlaps "
+                    f"[{other.start}, {other.stop})")
+        spans.append(sp)
+        spans.sort(key=lambda s: s.start)
+        return self
+
+    def add_spans(self, name: str, spans: Sequence[Span],
+                  shape: Sequence[int]) -> "PatchSet":
+        for sp in spans:
+            self.add(name, sp.start, sp.data, shape)
+        return self
+
+    @classmethod
+    def from_arrays(cls, updates: Dict[str, np.ndarray]) -> "PatchSet":
+        """Whole-leaf compatibility path: every value becomes one span
+        covering its leaf."""
+        ps = cls()
+        for name, arr in updates.items():
+            ps.add(name, 0, np.asarray(arr))
+        return ps
+
+    @classmethod
+    def coerce(cls, obj) -> "PatchSet":
+        """Accept a PatchSet, a legacy ``{name: array}`` dict, or a
+        ``{name: [Span, ...]}``/``{name: RowUpdate}`` dict (shapes
+        inferred where derivable)."""
+        if isinstance(obj, cls):
+            return obj
+        if not isinstance(obj, dict):
+            raise TypeError(f"cannot coerce {type(obj).__name__} to "
+                            f"PatchSet")
+        ps = cls()
+        for name, v in obj.items():
+            if isinstance(v, RowUpdate):
+                ps.add_spans(name, v.spans(), v.shape)
+            elif isinstance(v, (list, tuple)) \
+                    and all(isinstance(s, Span) for s in v) and v:
+                # span lists without a declared shape: bound the extent
+                # by the last span (enough for patch_frame, which
+                # validates against the frame header anyway)
+                stop = max(s.stop for s in v)
+                tail = np.asarray(v[0].data).shape[1:]
+                ps.add_spans(name, list(v), (stop,) + tuple(tail))
+            else:
+                ps.add(name, 0, np.asarray(v))
+        return ps
+
+    # -- mapping surface ----------------------------------------------
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._spans))
+
+    def __len__(self) -> int:
+        return len(self._spans)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._spans
+
+    def __getitem__(self, name: str) -> Tuple[Span, ...]:
+        return tuple(self._spans[name])
+
+    def __bool__(self) -> bool:
+        return bool(self._spans)
+
+    def names(self) -> List[str]:
+        return sorted(self._spans)
+
+    def shape_of(self, name: str) -> tuple:
+        return self._shapes[name]
+
+    def is_whole(self, name: str) -> bool:
+        """True when the leaf's spans are one full-cover span."""
+        spans = self._spans[name]
+        shape = self._shapes[name]
+        if len(spans) != 1:
+            return False
+        sp = spans[0]
+        return sp.start == 0 and (not shape or sp.rows == shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(sum(np.asarray(sp.data).nbytes
+                       for spans in self._spans.values() for sp in spans))
+
+    @property
+    def span_count(self) -> int:
+        return sum(len(s) for s in self._spans.values())
+
+    def extents(self) -> Dict[str, List[List[int]]]:
+        return {name: [[sp.start, sp.stop] for sp in self._spans[name]]
+                for name in self}
+
+    # -- derived sets --------------------------------------------------
+    def subset(self, names: Sequence[str]) -> "PatchSet":
+        """Share-nothing-to-validate view over a subset of leaves (span
+        arrays are shared by reference — subsets feed bounded fold
+        slices, not mutation)."""
+        ps = PatchSet()
+        for name in names:
+            ps._spans[name] = list(self._spans[name])
+            ps._shapes[name] = self._shapes[name]
+        return ps
+
+    def copy(self) -> "PatchSet":
+        """Deep copy (span data owned): for tiers that must snapshot the
+        patch before handing it to an async write-back."""
+        ps = PatchSet()
+        for name, spans in self._spans.items():
+            ps._spans[name] = [Span(sp.start, np.array(np.asarray(sp.data)))
+                               for sp in spans]
+            ps._shapes[name] = self._shapes[name]
+        return ps
+
+    # -- wire form -----------------------------------------------------
+    def to_tree(self) -> dict:
+        """Serializable pytree (plain dicts/lists/arrays) for the peer
+        wire protocol's range PATCH payloads — round-trips through
+        ``frame_dumps``/``frame_loads`` and zero-copy transports."""
+        return {"__patchset__": 1,
+                "leaves": {name: {
+                    "shape": [int(x) for x in self._shapes[name]],
+                    "starts": np.asarray(
+                        [sp.start for sp in self._spans[name]], np.int64),
+                    "rows": [np.asarray(sp.data)
+                             for sp in self._spans[name]]}
+                    for name in self}}
+
+    @classmethod
+    def is_tree(cls, obj) -> bool:
+        return isinstance(obj, dict) and "__patchset__" in obj
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "PatchSet":
+        ps = cls()
+        for name, rec in tree["leaves"].items():
+            shape = tuple(int(x) for x in rec["shape"])
+            for s, r in zip(np.asarray(rec["starts"]).tolist(),
+                            rec["rows"]):
+                ps.add(name, int(s), np.asarray(r), shape)
+        return ps
+
+
+# ----------------------------------------------------------------------
+# interval math
+# ----------------------------------------------------------------------
+
+def mask_to_intervals(persist: np.ndarray,
+                      bridgeable: Optional[np.ndarray] = None,
+                      max_gap: int = 0) -> List[Tuple[int, int]]:
+    """Extract ``[start, stop)`` intervals from a boolean row mask,
+    coalescing adjacent runs. With ``max_gap`` > 0 two runs separated by
+    at most that many rows merge *when every gap row is bridgeable*
+    (clean rows: re-writing them is a byte-identical no-op; a
+    dirty-but-deferred row must never be bridged over — it would be
+    persisted and defeat its deferral)."""
+    idx = np.flatnonzero(persist)
+    if idx.size == 0:
+        return []
+    out: List[Tuple[int, int]] = []
+    start = prev = int(idx[0])
+    for i in idx[1:].tolist():
+        gap = i - prev - 1
+        if gap == 0 or (gap <= max_gap and (
+                bridgeable is None or bool(bridgeable[prev + 1:i].all()))):
+            prev = i
+            continue
+        out.append((start, prev + 1))
+        start = prev = i
+    out.append((start, prev + 1))
+    return out
+
+
+def _subtract(start: int, stop: int,
+              covered: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Parts of [start, stop) not covered by the sorted disjoint list."""
+    out = []
+    pos = start
+    for s, e in covered:
+        if e <= pos:
+            continue
+        if s >= stop:
+            break
+        if s > pos:
+            out.append((pos, min(s, stop)))
+        pos = max(pos, e)
+        if pos >= stop:
+            break
+    if pos < stop:
+        out.append((pos, stop))
+    return out
+
+
+def _union(covered: List[Tuple[int, int]],
+           iv: Tuple[int, int]) -> List[Tuple[int, int]]:
+    """Insert one interval into a sorted disjoint list, merging."""
+    s, e = iv
+    out: List[Tuple[int, int]] = []
+    placed = False
+    for cs, ce in covered:
+        if ce < s or cs > e:
+            if not placed and cs > e:
+                out.append((s, e))
+                placed = True
+            out.append((cs, ce))
+        else:
+            s, e = min(s, cs), max(e, ce)
+    if not placed:
+        out.append((s, e))
+    out.sort()
+    return out
+
+
+def merge_span_chain(chain: Sequence[Sequence[Span]]) -> List[Span]:
+    """Merge a patch chain's span lists (oldest -> newest) into one
+    disjoint span list with *newest-wins* semantics: walking newest
+    first, each span contributes only the row ranges no newer patch
+    already covered — the emitted blocks are zero-copy views into the
+    source arrays, so folding thousands of tiny patches never
+    materializes a full leaf."""
+    covered: List[Tuple[int, int]] = []
+    out: List[Span] = []
+    for spans in reversed(list(chain)):
+        for sp in spans:
+            d = np.asarray(sp.data)
+            if d.ndim == 0:
+                if not _subtract(0, 1, covered):
+                    continue
+                out.append(Span(0, d))
+                covered = _union(covered, (0, 1))
+                continue
+            for s, e in _subtract(sp.start, sp.stop, covered):
+                out.append(Span(s, d[s - sp.start:e - sp.start]))
+            covered = _union(covered, (sp.start, sp.stop))
+    out.sort(key=lambda sp: sp.start)
+    return out

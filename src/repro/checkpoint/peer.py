@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import StorageBackend
+from repro.checkpoint.patchset import PatchSet
 from repro.checkpoint.remote import (ChecksumError, FaultInjector,
                                      RetryExhaustedError,
                                      TransientStoreError)
@@ -238,12 +239,15 @@ class PeerNode:
     def _patch(self, key: str, meta: dict,
                payload: bytes) -> Tuple[bytes, str, dict, bytes]:
         """Apply an in-place partial update to a replica: the payload is
-        a frame of ``{leaf_name: array}`` updates keyed by the base
-        frame's payload names (``a0..aN``, pack order) — the same
-        addressing the durable tiers' ``patch`` uses, so peer replicas
-        track the background fold and stay current."""
+        a :class:`PatchSet` wire tree (or a legacy ``{leaf_name: array}``
+        dict/frame) keyed by the base frame's payload names (``a0..aN``,
+        pack order) — the same addressing the durable tiers' ``patch``
+        uses, so peer replicas track range patches and the background
+        fold and stay current."""
         updates = (payload if isinstance(payload, dict)
                    else cio.frame_loads(payload))
+        ps = (PatchSet.from_tree(updates) if PatchSet.is_tree(updates)
+              else PatchSet.coerce(updates))
         with self._lock:
             hit = self._blobs.get(key)
         if hit is None:
@@ -252,12 +256,31 @@ class PeerNode:
         as_bytes = isinstance(blob, (bytes, bytearray, memoryview))
         obj = cio.frame_loads(blob) if as_bytes else blob
         tree, arrays = cio.pack(obj)
-        for name, arr in updates.items():
+        for name in ps:
             idx = int(name[1:])  # frame payload names are a<pack index>
             if idx >= len(arrays):
                 return ERR, key, {"error": f"patch leaf {name} out of "
                                            f"range for {key}"}, b""
-            arrays[idx] = np.asarray(arr)
+            base = np.asarray(arrays[idx])
+            copied = False
+            for sp in ps[name]:
+                a = np.asarray(sp.data)
+                if sp.start == 0 and a.shape == base.shape:
+                    base = a     # whole-leaf span: replace by reference
+                    continue
+                if (base.ndim == 0 or a.ndim == 0 or a.dtype != base.dtype
+                        or a.shape[1:] != base.shape[1:]
+                        or sp.stop > base.shape[0]):
+                    return ERR, key, {
+                        "error": f"patch span rows [{sp.start}, {sp.stop}) "
+                                 f"of leaf {name} do not fit {key}"}, b""
+                if not copied:
+                    # replica arrays may be read-only views into the
+                    # stored blob — splice into a private copy
+                    base = np.array(base)
+                    copied = True
+                base[sp.start:sp.stop] = a
+            arrays[idx] = base
         new_obj = cio.unpack(tree, arrays)
         # a zero-copy replica stays an object tree; a framed one stays
         # bytes — the representation the replica arrived in is kept
@@ -884,12 +907,16 @@ class PeerReplicaBackend(StorageBackend):
             f"no blob {key!r} in the lower tier or on "
             f"{len(candidates)} peers")
 
-    def patch(self, key: str, updates: Dict[str, np.ndarray]) -> int:
-        n = self.lower.patch(key, updates)
+    def patch(self, key: str, patch: PatchSet) -> int:
+        ps = PatchSet.coerce(patch)
+        n = self.lower.patch(key, ps)
         if self.replicas > 0:
-            ups = {k: np.asarray(v) for k, v in updates.items()}
-            payload = (ups if self.transport.zero_copy
-                       else _once(lambda: cio.frame_dumps(ups)))
+            # range PATCH on the wire: the PatchSet's serializable tree
+            # — a zero-copy transport takes the span arrays by
+            # reference, the framed path encodes once across the K sends
+            tree = ps.to_tree()
+            payload = (tree if self.transport.zero_copy
+                       else _once(lambda: cio.frame_dumps(tree)))
             self._replicate_async(PATCH, key, {"src": self.src}, payload)
         return n
 

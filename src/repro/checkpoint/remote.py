@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import StorageBackend
+from repro.checkpoint.patchset import PatchSet
 
 
 class TransientStoreError(Exception):
@@ -468,23 +469,26 @@ class RemoteObjectBackend(StorageBackend):
         header = json.loads(bytes(head[magic_len + 8:need]).decode("utf-8"))
         return header, hlen, need + (-need) % cio.FRAME_ALIGN, fetched
 
-    def patch(self, key: str, updates: Dict[str, Any]) -> int:
+    def patch(self, key: str, patch: PatchSet) -> int:
         with self._lock:
             self._active_puts.add(key)
         try:
-            return self._patch(key, updates)
+            return self._patch(key, patch)
         finally:
             with self._lock:
                 self._active_puts.discard(key)
 
-    def _patch(self, key: str, updates: Dict[str, Any]) -> int:
-        """Re-put only the chunk objects a dirty leaf's byte range (or
-        the rewritten header) intersects, under a fresh generation; the
+    def _patch(self, key: str, patch: PatchSet) -> int:
+        """Re-put only the chunk objects a dirty row range's bytes (or
+        the rewritten header) intersect, under a fresh generation; the
         new index references the new chunks *and* every untouched chunk
         of the previous generation by name — unchanged bytes are never
-        re-uploaded. The index write is the commit point, exactly as in
-        ``put``: a crash mid-patch leaves the old index live and only
-        orphan chunks behind."""
+        re-uploaded. A partially-patched leaf's sha256 must cover its
+        retained rows too, so those (and only those) chunks are
+        downloaded once and spliced. The index write is the commit
+        point, exactly as in ``put``: a crash mid-patch leaves the old
+        index live and only orphan chunks behind."""
+        ps = PatchSet.coerce(patch)
         index = self._load_index(key)
         if index.get("format", "npz") != "frame":
             raise ValueError(
@@ -492,24 +496,65 @@ class RemoteObjectBackend(StorageBackend):
                 f"incremental persistence requires the frame format")
         chunks = list(index["chunks"])
         header, hlen, data_start, fetched = self._read_frame_header(chunks)
-        bytes_down = sum(len(b) for b in fetched.values())
+        down = [sum(len(b) for b in fetched.values())]
+        offs = [0]
+        for c in chunks:
+            offs.append(offs[-1] + int(c["size"]))
+
+        def read_range(lo: int, hi: int) -> bytes:
+            """Committed frame bytes [lo, hi), fetching (and caching)
+            only the chunks the range touches."""
+            out = bytearray(hi - lo)
+            for i, c in enumerate(chunks):
+                clo, chi = offs[i], offs[i + 1]
+                if chi <= lo or clo >= hi:
+                    continue
+                b = fetched.get(i)
+                if b is None:
+                    b = self._fetch_chunk(c)
+                    fetched[i] = b
+                    down[0] += len(b)
+                s, e = max(lo, clo), min(hi, chi)
+                out[s - lo:e - lo] = b[s - clo:e - clo]
+            return bytes(out)
+
         by_name = {leaf["name"]: leaf for leaf in header["leaves"]}
         magic_len = len(cio.FRAME_MAGIC)
-        # dirty byte ranges: each updated leaf, plus the header rewrite
+        # dirty byte ranges: each patched span, plus the header rewrite
         ranges: List[Tuple[int, bytes]] = []
-        for name in sorted(updates):
+        for name in ps:
             rec = by_name.get(name)
             if rec is None:
                 raise ValueError(f"remote frame {key!r} has no leaf {name!r}")
-            a = np.asarray(updates[name])
-            if a.dtype.str != rec["dtype"] or list(a.shape) != rec["shape"]:
-                raise ValueError(
-                    f"leaf {name!r} layout mismatch on {key!r}: "
-                    f"{a.dtype.str}{a.shape} != "
-                    f"{rec['dtype']}{tuple(rec['shape'])}")
-            raw = np.ascontiguousarray(a).tobytes()
-            rec["sha256"] = _sha256(raw)
-            ranges.append((data_start + rec["offset"], raw))
+            rshape = tuple(rec["shape"])
+            rows = rshape[0] if rshape else 1
+            stride = int(rec["nbytes"]) // rows if rows else 0
+            leaf_lo = data_start + rec["offset"]
+            span_raws: List[Tuple[int, bytes]] = []
+            for sp in ps[name]:
+                a = np.asarray(sp.data)
+                span_rows = int(a.shape[0]) if a.ndim else 1
+                if a.dtype.str != rec["dtype"] or (
+                        (sp.start != 0 or list(a.shape) != rec["shape"])
+                        and (not rshape or a.ndim == 0
+                             or a.shape[1:] != rshape[1:]
+                             or sp.start + span_rows > rows)):
+                    raise ValueError(
+                        f"leaf {name!r} layout mismatch on {key!r}: rows "
+                        f"[{sp.start}, {sp.start + span_rows}) of "
+                        f"{a.dtype.str}{a.shape} != {rec['dtype']}{rshape}")
+                raw = np.ascontiguousarray(a).tobytes()
+                ranges.append((leaf_lo + sp.start * stride, raw))
+                span_raws.append((sp.start * stride, raw))
+            if ps.is_whole(name):
+                rec["sha256"] = _sha256(span_raws[0][1])
+            else:
+                # digest spans committed-retained + patched bytes
+                buf = bytearray(read_range(leaf_lo,
+                                           leaf_lo + int(rec["nbytes"])))
+                for off, raw in span_raws:
+                    buf[off:off + len(raw)] = raw
+                rec["sha256"] = _sha256(bytes(buf))
         hjson = json.dumps(header).encode("utf-8")
         if len(hjson) != hlen:
             raise ValueError(f"patched header for {key!r} length diverged "
@@ -529,7 +574,7 @@ class RemoteObjectBackend(StorageBackend):
                 old = fetched.get(i)
                 if old is None:
                     old = self._fetch_chunk(c)
-                    bytes_down += len(old)
+                    down[0] += len(old)
                 data = bytearray(old)
                 for o, b in touching:
                     s, e = max(lo, o), min(hi, o + len(b))
@@ -551,7 +596,7 @@ class RemoteObjectBackend(StorageBackend):
             f"put {self._index_name(key)}")
         self._count("patches")
         self._count("bytes_up", nbytes_up + len(index_bytes))
-        self._count("bytes_down", bytes_down)
+        self._count("bytes_down", down[0])
         with self._lock:
             self._live_gens[key] = gen
         self._sweep_stale(key, {c["name"] for c in new_chunks})

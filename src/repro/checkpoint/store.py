@@ -51,6 +51,8 @@ import numpy as np
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import LocalFSBackend, StorageBackend
+from repro.checkpoint.patchset import (PatchSet, RowUpdate, Span,
+                                       merge_span_chain)
 from repro.checkpoint.journal import (JournalTap, ManifestJournal,
                                       MemoryJournal,
                                       SegmentedManifestJournal, _entry_key)
@@ -92,6 +94,10 @@ def walk_leaves(tree, prefix: str = ""):
     if isinstance(tree, dict):
         for k, v in tree.items():
             yield from walk_leaves(v, f"{prefix}{k}/")
+    elif isinstance(tree, RowUpdate):
+        # a row-sparse leaf update is itself a leaf: its spans address
+        # one frame payload array, not nested children
+        yield prefix[:-1], tree
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
             yield from walk_leaves(v, f"{prefix}{i}/")
@@ -121,10 +127,18 @@ def payload_names(state) -> Dict[str, str]:
 
 def merge_updates(state, updates) -> None:
     """Overlay a patch blob's partial state dict onto ``state`` in
-    place (leaf-wise; nested dicts merge, anything else replaces)."""
+    place (leaf-wise; nested dicts merge, a :class:`RowUpdate` splices
+    its row spans into the base leaf, anything else replaces)."""
     for k, v in updates.items():
         if isinstance(v, dict) and isinstance(state.get(k), dict):
             merge_updates(state[k], v)
+        elif isinstance(v, RowUpdate):
+            # base leaves are often read-only memmap views of the full
+            # frame — splice into a private copy, never the file
+            base = np.array(state[k])
+            for sp in v.spans():
+                base[sp.start:sp.stop] = sp.data
+            state[k] = base
         else:
             state[k] = v
 
@@ -169,6 +183,9 @@ class CheckpointStore:
         self.folds = 0
         self.fold_bytes = 0
         self.folded_patches = 0
+        #: highest chain-read amplification observed (chain overlay
+        #: bytes / base frame bytes) — the adaptive fold trigger's input
+        self.max_amplification = 0.0
         self._prune_missing()
         self._update_protected()
 
@@ -213,13 +230,15 @@ class CheckpointStore:
         return key
 
     def save_patch(self, step: int, base_key: str, updates) -> str:
-        """Persist only the leaves that changed since the last persist,
-        as a durable patch blob chained onto ``base_key`` — the
-        incremental-merging persistence write path. ``updates`` is a
-        partial state dict (same nesting as the base full, dirty leaves
-        only). The blob lands and is journaled *before* any in-place
-        fold touches the base frame, so it doubles as the fold's
-        write-ahead log."""
+        """Persist only what changed since the last persist, as a
+        durable patch blob chained onto ``base_key`` — the incremental-
+        merging persistence write path. ``updates`` is a partial state
+        dict (same nesting as the base full): whole dirty leaves, or
+        :class:`RowUpdate` values carrying just the dirty row spans.
+        Row extents are journaled in the manifest entry, so the chain's
+        shape is inspectable without loading blobs. The blob lands and
+        is journaled *before* any in-place fold touches the base frame,
+        so it doubles as the fold's write-ahead log."""
         if getattr(self.backend, "fmt", "npz") == "npz":
             raise ValueError(
                 "incremental persistence (save_patch) requires the "
@@ -229,11 +248,44 @@ class CheckpointStore:
         self._update_protected(extra={key})
         n = self.backend.put(key, {"base": base_key, "step": step,
                                    "updates": updates})
-        self._record("patches", {"step": step, "key": key, "base": base_key,
-                                 "path": self.backend.url(key),
-                                 "bytes": n}, n)
+        entry = {"step": step, "key": key, "base": base_key,
+                 "path": self.backend.url(key), "bytes": n}
+        extents = {path: leaf.extents()
+                   for path, leaf in walk_leaves(updates)
+                   if isinstance(leaf, RowUpdate)}
+        if extents:
+            entry["extents"] = extents
+        self._record("patches", entry, n)
         self._update_protected()
+        with self._lock:
+            self.max_amplification = max(self.max_amplification,
+                                         self.chain_amplification())
         return key
+
+    def chain_amplification(self, base_key: Optional[str] = None) -> float:
+        """Chain-read amplification of a base full's patch chain: bytes
+        recovery must overlay on top of the base frame, divided by the
+        base frame's own bytes. Defaults to the newest addressable full
+        (the chain ``fold_plan`` would pick). 0.0 when there is no
+        chain. Lock-only — cheap enough to evaluate per persist, which
+        is exactly what the adaptive fold trigger does."""
+        with self._lock:
+            if base_key is None:
+                fulls = [e for e in self.manifest["fulls"] if "names" in e]
+                if not fulls:
+                    return 0.0
+                entry = max(fulls, key=lambda e: int(e["step"]))
+                base_key = self._entry_key(entry)
+            else:
+                entry = next((e for e in self.manifest["fulls"]
+                              if self._entry_key(e) == base_key), None)
+                if entry is None:
+                    return 0.0
+            base_bytes = max(int(entry.get("bytes", 0)), 1)
+            chain = sum(int(e.get("bytes", 0))
+                        for e in self.manifest.get("patches", [])
+                        if e.get("base") == base_key)
+        return chain / base_bytes
 
     def save_diff(self, step: int, payload) -> str:
         key = f"diff_{step:08d}"
@@ -489,11 +541,17 @@ class CheckpointStore:
                             int(patches[-1]["step"]))
         return None
 
-    def fold_updates(self, base_key: str, patch_keys: List[str]):
-        """Load the planned patch chain and merge it (later patches
-        win per leaf) into ``{frame leaf name: array}`` ready for
-        ``backend.patch``. Returns None when the chain or its base is
-        gone — superseded or already folded since the plan."""
+    def fold_updates(self, base_key: str,
+                     patch_keys: List[str]) -> Optional[PatchSet]:
+        """Load the planned patch chain and merge it into a
+        :class:`PatchSet` ready for ``backend.patch``. Overlapping row
+        ranges merge *newest-wins* — walking the chain newest-first,
+        each span contributes only the rows no later patch rewrote, so
+        a thousand tiny patches of the same rows fold into one span of
+        zero-copy views. A whole-leaf update is the full-cover span, so
+        mixed leaf-/row-granular chains merge under the same rule.
+        Returns None when the chain or its base is gone — superseded or
+        already folded since the plan."""
         with self._lock:
             entry = next((e for e in self.manifest["fulls"]
                           if self._entry_key(e) == base_key), None)
@@ -501,22 +559,30 @@ class CheckpointStore:
                 else None
         if names is None:
             return None
-        merged: Dict[str, Any] = {}
+        chains: Dict[str, List[List[Span]]] = {}
+        shapes: Dict[str, tuple] = {}
         for key in patch_keys:
             try:
                 blob = self.backend.get(key)
             except FileNotFoundError:
                 return None
             for path, leaf in walk_leaves(blob["updates"]):
-                merged[path] = leaf
-        out = {}
-        for path, leaf in merged.items():
+                if isinstance(leaf, RowUpdate):
+                    spans = leaf.spans()
+                    shapes[path] = tuple(int(x) for x in leaf.shape)
+                else:
+                    a = np.asarray(leaf)
+                    spans = [Span(0, a)]
+                    shapes[path] = a.shape
+                chains.setdefault(path, []).append(spans)
+        out = PatchSet()
+        for path, chain in chains.items():
             name = names.get(path)
             if name is None:
                 raise KeyError(
                     f"patch leaf {path!r} is not addressable in base "
                     f"{base_key!r} (missing from its name map)")
-            out[name] = np.asarray(leaf)
+            out.add_spans(name, merge_span_chain(chain), shapes[path])
         return out
 
     def fold_slice(self, base_key: str, updates) -> int:
@@ -568,11 +634,10 @@ class CheckpointStore:
         updates = self.fold_updates(base_key, patch_keys)
         if updates is None:
             return 0
-        names = sorted(updates)
+        names = updates.names()
         width = max(1, int(merge_slice)) if merge_slice else len(names) or 1
         for i in range(0, len(names), width):
-            self.fold_slice(base_key,
-                            {n: updates[n] for n in names[i:i + width]})
+            self.fold_slice(base_key, updates.subset(names[i:i + width]))
         self.fold_commit(base_key, patch_keys, state_step)
         return len(patch_keys)
 
@@ -789,6 +854,8 @@ class CheckpointStore:
                     "patches": len(self.manifest.get("patches", [])),
                     "folds": self.folds, "fold_bytes": self.fold_bytes,
                     "folded_patches": self.folded_patches,
+                    "chain_amplification": self.chain_amplification(),
+                    "max_amplification": self.max_amplification,
                     "gc_deleted": self.gc_deleted,
                     "quarantined": len(self.manifest.get("quarantined", [])),
                     "journal": self.journal.stats(),

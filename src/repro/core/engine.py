@@ -37,7 +37,9 @@ FLAG_MAP: Dict[str, tuple] = {
     "compressor": ("engine", "compressor"),
     "persist_mode": ("engine", "persist_mode"),
     "persist_threshold": ("engine", "persist_threshold"),
+    "dirty_granularity": ("engine", "dirty_granularity"),
     "fold_interval": ("engine", "fold_interval"),
+    "fold_amplification": ("engine", "fold_amplification"),
     "replay_window": ("engine", "replay_window"),
     "maintenance": ("engine", "maintenance"),
     "gc_slice": ("engine", "gc_slice"),
@@ -80,7 +82,9 @@ class EngineConfig:
     compressor: str = "topk"
     persist_mode: str = "full"
     persist_threshold: float = 0.0
+    dirty_granularity: str = "leaf"
     fold_interval: int = 16
+    fold_amplification: float = 1.5
     replay_window: int = 0
     maintenance: bool = False
     gc_slice: int = 64
@@ -97,6 +101,10 @@ class EngineConfig:
             raise StoreConfigError(
                 f"persist_mode: {self.persist_mode!r} is not "
                 f"'full'/'incremental'")
+        if self.dirty_granularity not in ("leaf", "row"):
+            raise StoreConfigError(
+                f"dirty_granularity: {self.dirty_granularity!r} is not "
+                f"'leaf'/'row'")
         if self.compressor not in ("topk", "quant8", "packed"):
             raise StoreConfigError(
                 f"compressor: {self.compressor!r} is not one of "
@@ -213,7 +221,9 @@ def make_engine(cfg: EngineConfig, model, store=None):
                            persist_interval=cfg.batch_size or 1,
                            persist_mode=cfg.persist_mode,
                            persist_threshold=cfg.persist_threshold,
-                           fold_interval=cfg.fold_interval)
+                           dirty_granularity=cfg.dirty_granularity,
+                           fold_interval=cfg.fold_interval,
+                           fold_amplification=cfg.fold_amplification)
     if cfg.strategy == "checkfreq":
         return CheckFreq(model, store, lr=cfg.lr, interval=10)
     if cfg.strategy == "gemini":

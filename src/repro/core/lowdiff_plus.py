@@ -42,6 +42,7 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.checkpoint.patchset import RowUpdate, mask_to_intervals
 from repro.checkpoint.store import CheckpointStore
 from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
                                       wait_drained)
@@ -59,10 +60,28 @@ class _NumpyAdam:
     zero is provably unchanged by the step (the update is exactly 0)
     and is skipped without touching it; every other applied leaf is
     marked dirty and its accumulated L∞ parameter drift tracked for
-    the optional ``--persist-threshold`` filter."""
+    the optional ``--persist-threshold`` filter.
+
+    ``dirty_granularity="row"`` drops the tracked unit from leaves to
+    axis-0 rows: a row is provably unchanged when its gradient and both
+    pre-update moment rows are all zero (its Adam update is exactly
+    0.0), so a sparse step — one routed expert's rows of a big MoE
+    table — dirties only those rows. Per-row drift carries the
+    ``--persist-threshold`` semantics at row granularity, and adjacent
+    dirty runs separated by up to ``coalesce_rows`` *clean* rows merge
+    into one span before snapshot (re-writing a clean row is a
+    byte-identical no-op, so bridging trades a few redundant bytes for
+    far fewer spans; a dirty-but-deferred row is never bridged over).
+    Scalar and single-row leaves keep leaf granularity."""
+
+    GRANULARITIES = ("leaf", "row")
 
     def __init__(self, params, mu, nu, count, *, lr, b1=0.9, b2=0.999,
-                 eps=1e-8, track_dirty: bool = False):
+                 eps=1e-8, track_dirty: bool = False,
+                 dirty_granularity: str = "leaf", coalesce_rows: int = 4):
+        if dirty_granularity not in self.GRANULARITIES:
+            raise ValueError(f"dirty_granularity must be one of "
+                             f"{self.GRANULARITIES}")
         self.params = {k: np.array(v, np.float32) if v.dtype != np.float32
                        else np.array(v) for k, v in params.items()}
         self.dtypes = {k: v.dtype for k, v in params.items()}
@@ -71,11 +90,28 @@ class _NumpyAdam:
         self.count = int(count)
         self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
         self.track_dirty = track_dirty
+        self.dirty_granularity = dirty_granularity
+        self.coalesce_rows = int(coalesce_rows)
         #: leaves whose replica bytes differ from the last snapshot
         self._dirty = set(self.params)
         #: accumulated L∞ parameter change since the leaf last persisted
         self._drift = {k: 0.0 for k in self.params}
+        #: row-granular leaves: per-row dirty mask + drift (everything
+        #: starts dirty, like the leaf-level set — nothing is persisted
+        #: yet)
+        self._row_dirty: Dict[str, np.ndarray] = {}
+        self._row_drift: Dict[str, np.ndarray] = {}
+        if track_dirty and dirty_granularity == "row":
+            for k, v in self.params.items():
+                if v.ndim >= 1 and v.shape[0] > 1:
+                    self._row_dirty[k] = np.ones(v.shape[0], bool)
+                    self._row_drift[k] = np.zeros(v.shape[0], np.float32)
         self.skipped_applies = 0
+
+    @staticmethod
+    def _row_any(a: np.ndarray) -> np.ndarray:
+        """Per-row nonzero mask (bool, shape (rows,))."""
+        return a.reshape(a.shape[0], -1).any(axis=1)
 
     def apply(self, grads: Dict[str, np.ndarray]):
         self.count += 1
@@ -91,6 +127,13 @@ class _NumpyAdam:
                 # does not change, so neither math nor dirty-marking runs
                 self.skipped_applies += 1
                 continue
+            rd = self._row_dirty.get(k) if self.track_dirty else None
+            if rd is not None:
+                # pre-update mask: a row changes iff its gradient or a
+                # pre-update moment row is nonzero (same proof as the
+                # leaf-level skip, per row)
+                changed = (self._row_any(g) | self._row_any(mu)
+                           | self._row_any(nu))
             mu *= self.b1
             mu += (1 - self.b1) * g
             nu *= self.b2
@@ -101,6 +144,13 @@ class _NumpyAdam:
                 self._dirty.add(k)
                 if upd.size:
                     self._drift[k] += float(np.max(np.abs(upd)))
+                if rd is not None:
+                    rd |= changed
+                    if upd.size:
+                        rowmax = np.abs(
+                            upd.reshape(upd.shape[0], -1)).max(axis=1)
+                        dr = self._row_drift[k]
+                        dr[changed] += rowmax[changed].astype(np.float32)
 
     def state(self):
         return {"params": dict(self.params), "mu": dict(self.mu),
@@ -117,41 +167,115 @@ class _NumpyAdam:
         if self.track_dirty:
             self._dirty.clear()
             self._drift = {k: 0.0 for k in self._drift}
+            for k in self._row_dirty:
+                self._row_dirty[k][:] = False
+                self._row_drift[k][:] = 0.0
         return snap
 
     def snapshot_dirty(self, threshold: float = 0.0):
-        """Copy only the dirty leaves (plus the always-advancing Adam
-        count) for an incremental persist. With ``threshold`` > 0 a
-        dirty leaf whose accumulated relative L∞ drift is still below
-        ``threshold`` is *deferred*: it stays dirty and its drift keeps
-        accumulating, so a near-converged leaf stops being re-persisted
-        until it has moved enough to matter. Returns ``(partial state
-        dict, deferred leaf count)``."""
+        """Copy only the dirty leaves — or, at row granularity, only
+        each dirty leaf's dirty row spans as :class:`RowUpdate` values —
+        plus the always-advancing Adam count, for an incremental
+        persist. With ``threshold`` > 0 a dirty leaf (or row) whose
+        accumulated relative L∞ drift is still below ``threshold``
+        (scaled by the leaf's max |param|) is *deferred*: it stays
+        dirty and its drift keeps accumulating, so near-converged state
+        stops being re-persisted until it has moved enough to matter.
+        Returns ``(partial state dict, deferred leaf count)`` — a
+        row-granular leaf counts deferred only when *none* of its dirty
+        rows passed the threshold."""
         updates = {"params": {}, "mu": {}, "nu": {},
                    "count": np.array(self.count, np.int64)}
         deferred = 0
         for k in sorted(self._dirty):
+            rd = self._row_dirty.get(k)
+            if rd is None:
+                # leaf granularity (or a scalar / single-row leaf)
+                if threshold > 0.0:
+                    p = self.params[k]
+                    scale = float(np.max(np.abs(p))) if p.size else 0.0
+                    if self._drift[k] <= threshold * (scale + 1e-12):
+                        deferred += 1
+                        continue
+                updates["params"][k] = np.array(self.params[k])
+                updates["mu"][k] = np.array(self.mu[k])
+                updates["nu"][k] = np.array(self.nu[k])
+                self._dirty.discard(k)
+                self._drift[k] = 0.0
+                continue
+            dr = self._row_drift[k]
             if threshold > 0.0:
                 p = self.params[k]
                 scale = float(np.max(np.abs(p))) if p.size else 0.0
-                if self._drift[k] <= threshold * (scale + 1e-12):
-                    deferred += 1
-                    continue
-            updates["params"][k] = np.array(self.params[k])
-            updates["mu"][k] = np.array(self.mu[k])
-            updates["nu"][k] = np.array(self.nu[k])
-            self._dirty.discard(k)
-            self._drift[k] = 0.0
+                persist = rd & (dr > threshold * (scale + 1e-12))
+            else:
+                persist = rd.copy()
+            if not persist.any():
+                deferred += 1
+                continue
+            # bridge only across *clean* rows: a deferred dirty row's
+            # replica bytes differ from its persisted bytes, so writing
+            # it would defeat the deferral — a clean row re-writes to
+            # identical bytes
+            ivs = mask_to_intervals(persist, bridgeable=~rd,
+                                    max_gap=self.coalesce_rows)
+            rows = int(rd.shape[0])
+            for comp, src in (("params", self.params), ("mu", self.mu),
+                              ("nu", self.nu)):
+                a = src[k]
+                if len(ivs) == 1 and ivs[0] == (0, rows):
+                    # every row persists: plain whole-leaf update (same
+                    # blob shape leaf granularity writes)
+                    updates[comp][k] = np.array(a)
+                else:
+                    updates[comp][k] = RowUpdate(
+                        starts=np.asarray([s for s, _ in ivs], np.int64),
+                        rows=[np.array(a[s:e]) for s, e in ivs],
+                        shape=tuple(a.shape))
+            rd[persist] = False
+            dr[persist] = 0.0
+            if rd.any():
+                self._drift[k] = float(dr[rd].max())
+            else:
+                self._dirty.discard(k)
+                self._drift[k] = 0.0
         return updates, deferred
 
     def remark_dirty(self, updates) -> None:
         """Undo a snapshot's clean-marking after its persist *failed*:
-        the leaves it carried never became durable, so they must ride
-        the next persist or every later recovery silently restores
-        stale values for them. Infinite drift defeats any threshold."""
-        for k in updates.get("params", {}):
+        the leaves (or row spans) it carried never became durable, so
+        they must ride the next persist or every later recovery
+        silently restores stale values for them. Infinite drift defeats
+        any threshold."""
+        for k, v in updates.get("params", {}).items():
             self._dirty.add(k)
             self._drift[k] = float("inf")
+            rd = self._row_dirty.get(k)
+            if rd is None:
+                continue
+            dr = self._row_drift[k]
+            if isinstance(v, RowUpdate):
+                for sp in v.spans():
+                    rd[sp.start:sp.stop] = True
+                    dr[sp.start:sp.stop] = np.inf
+            else:
+                rd[:] = True
+                dr[:] = np.inf
+
+
+def fold_due(since_fold: int, fold_interval: int, amplification: float,
+             fold_amplification: float) -> bool:
+    """Fold-trigger policy: adaptive on observed chain-read
+    amplification (chain overlay bytes / base frame bytes crossing
+    ``fold_amplification``), with the fixed patch count
+    ``fold_interval`` as a cap. ``fold_interval == 0`` keeps its
+    historical meaning — never fold — and ``fold_amplification <= 0``
+    disables the adaptive trigger."""
+    if not fold_interval:
+        return False
+    return (since_fold >= fold_interval
+            or (fold_amplification > 0
+                and amplification >= fold_amplification))
 
 
 def _flatten(tree):
@@ -176,10 +300,15 @@ class LowDiffPlus:
                  persist_interval: int = 1, snapshot_workers: int = 4,
                  queue_size: int = 8, flush_timeout: float = 120.0,
                  persist_mode: str = "full",
-                 persist_threshold: float = 0.0, fold_interval: int = 16):
+                 persist_threshold: float = 0.0, fold_interval: int = 16,
+                 dirty_granularity: str = "leaf",
+                 fold_amplification: float = 1.5):
         if persist_mode not in self.PERSIST_MODES:
             raise ValueError(f"persist_mode must be one of "
                              f"{self.PERSIST_MODES}")
+        if dirty_granularity not in _NumpyAdam.GRANULARITIES:
+            raise ValueError(f"dirty_granularity must be one of "
+                             f"{_NumpyAdam.GRANULARITIES}")
         if (persist_mode == "incremental" and store is not None
                 and getattr(store.backend, "fmt", "npz") == "npz"):
             raise ValueError(
@@ -193,6 +322,10 @@ class LowDiffPlus:
         self.persist_threshold = float(persist_threshold)
         #: schedule a background fold after this many patches (0 = never)
         self.fold_interval = int(fold_interval)
+        self.dirty_granularity = dirty_granularity
+        #: adaptive fold trigger: fold when chain overlay bytes / base
+        #: frame bytes crosses this (<= 0 disables; fold_interval caps)
+        self.fold_amplification = float(fold_amplification)
         self.step_fn = make_train_step(model, mode="lowdiff_plus", lr=lr)
         self.queue = ReusingQueue(maxsize=queue_size)
         self._snap_pool = ThreadPoolExecutor(max_workers=snapshot_workers,
@@ -212,6 +345,7 @@ class LowDiffPlus:
         self.persists = 0
         self.patch_persists = 0
         self.leaves_deferred = 0
+        self.adaptive_folds = 0
         # incremental-persist chain state: only ever touched on the
         # consumer / persist threads (single-threaded each, FIFO between)
         self._base_step: Optional[int] = None
@@ -226,7 +360,8 @@ class LowDiffPlus:
         self._replica = _NumpyAdam(
             host_copy(params), host_copy(mu), host_copy(nu),
             int(state["opt"].count), lr=self.lr,
-            track_dirty=(self.persist_mode == "incremental"))
+            track_dirty=(self.persist_mode == "incremental"),
+            dirty_granularity=self.dirty_granularity)
         self._replica_step = int(state["step"])
         self._base_step = None
 
@@ -311,9 +446,13 @@ class LowDiffPlus:
                 raise
             self.patch_persists += 1
             self._since_fold += 1
-            if self.fold_interval and self._since_fold >= self.fold_interval:
+            amp = self.store.chain_amplification()
+            if fold_due(self._since_fold, self.fold_interval, amp,
+                        self.fold_amplification):
                 # bound the patch chain: fold it into the base frame off
                 # the hot path (maintenance service when attached)
+                if self._since_fold < self.fold_interval:
+                    self.adaptive_folds += 1   # amplification fired first
                 self._since_fold = 0
                 self.store.request_fold()
         self.persists += 1
@@ -396,8 +535,13 @@ class LowDiffPlus:
                 "train_loop_ckpt_time": self.ckpt_time,
                 "persists": self.persists,
                 "persist_mode": self.persist_mode,
+                "dirty_granularity": self.dirty_granularity,
                 "patch_persists": self.patch_persists,
                 "leaves_deferred": self.leaves_deferred,
+                "fold_amplification": self.fold_amplification,
+                "chain_amplification": self.store.chain_amplification(),
+                "max_amplification": self.store.max_amplification,
+                "adaptive_folds": self.adaptive_folds,
                 "apply_leaves_skipped": (self._replica.skipped_applies
                                          if self._replica is not None
                                          else 0)}

@@ -201,9 +201,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "a dirty leaf until its accumulated relative "
                          "L-inf change exceeds this (0 = exact: persist "
                          "every changed leaf)")
+    ap.add_argument("--dirty-granularity", choices=("leaf", "row"),
+                    default="leaf",
+                    help="incremental persist unit: 'leaf' re-persists "
+                         "whole changed arrays; 'row' tracks dirtiness "
+                         "per first-axis row and patches only the "
+                         "changed row ranges")
     ap.add_argument("--fold-interval", type=int, default=16,
                     help="fold the patch chain into its base frame after "
                          "this many incremental persists (0 = never)")
+    ap.add_argument("--fold-amplification", type=float, default=1.5,
+                    help="also fold when chain overlay bytes divided by "
+                         "base frame bytes reach this ratio (0 = "
+                         "disable the adaptive trigger; --fold-interval "
+                         "stays as the hard cap)")
     ap.add_argument("--merge-slice", type=int, default=64,
                     help="leaves patched per journaled fold slice "
                          "(bounded work between progress records)")

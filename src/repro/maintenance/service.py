@@ -420,10 +420,9 @@ class MaintenanceService:
                                       "op": "done"})
                 self.progress.compact_if_idle()
                 return
-            names = sorted(updates)
+            names = updates.names()
             while pos < len(names):
-                chunk = {n: updates[n]
-                         for n in names[pos:pos + self.merge_slice]}
+                chunk = updates.subset(names[pos:pos + self.merge_slice])
                 try:
                     self.store.fold_slice(base_key, chunk)
                 except (RetryExhaustedError, TransientStoreError):
