@@ -34,6 +34,9 @@ MODULES = [
     ("exp14_incremental_persist", "benchmarks.incremental_persist"),
     ("exp15_peer_replica", "benchmarks.peer_replica"),
     ("exp16_row_granular", "benchmarks.row_granular"),
+    # third element (optional) = entry point, for modules hosting more
+    # than one experiment
+    ("exp17_device_replay", "benchmarks.recovery_bench", "main17"),
 ]
 
 
@@ -48,7 +51,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     results = []
     failures = 0
-    for name, modname in MODULES:
+    for entry in MODULES:
+        name, modname = entry[0], entry[1]
+        attr = entry[2] if len(entry) > 2 else "main"
         if args.only and args.only not in name:
             continue
         rows: list = []
@@ -59,8 +64,8 @@ def main() -> None:
 
         t0 = time.time()
         try:
-            mod = __import__(modname, fromlist=["main"])
-            mod.main(out)
+            mod = __import__(modname, fromlist=[attr])
+            getattr(mod, attr)(out)
             status = "ok"
             print(f"# {name} done in {time.time() - t0:.1f}s",
                   file=sys.stderr)

@@ -77,6 +77,39 @@ def roofline(arch: str, shape_id: str, *, multi_pod: bool = False,
     return rec
 
 
+def measured_copy_bandwidth(nbytes: int = 1 << 26, iters: int = 5) -> float:
+    """Measured memory-copy bandwidth of this host in bytes/s (2x the
+    copied size: one read + one write stream). The replay roofline's
+    denominator on CPU backends, where the training state lives in host
+    RAM; on an accelerator backend use :data:`HBM_BW` instead."""
+    import time as _time
+
+    import numpy as np
+    src = np.ones(nbytes, np.uint8)
+    dst = np.empty_like(src)
+    ts = []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        np.copyto(dst, src)
+        ts.append(_time.perf_counter() - t0)
+    return 2.0 * nbytes / float(np.median(ts))
+
+
+def replay_roofline(state_bytes: int, payload_bytes: int, n_diffs: int,
+                    bandwidth: Optional[float] = None) -> Dict:
+    """Memory-bandwidth lower bound for replaying ``n_diffs``
+    differentials through a stateful optimizer: each step must read and
+    write the full optimizer state (params + both f32 moments) once and
+    read its compressed payload — nothing less recovers Adam exactly.
+    ``payload_bytes`` is per differential."""
+    bw = bandwidth if bandwidth else (
+        HBM_BW if os.environ.get("REPRO_ACCEL") else
+        measured_copy_bandwidth())
+    traffic = n_diffs * (2 * state_bytes + payload_bytes)
+    return {"traffic_bytes": int(traffic), "bandwidth": float(bw),
+            "min_seconds": traffic / bw}
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser()

@@ -84,22 +84,80 @@ class CopyMeter:
     snapshot (the one unavoidable copy), npz blob materialization
     (``dumps``) and the remote tier's chunk re-slicing of that blob.
     ``benchmarks/serialization.py`` reads it to report copies-per-
-    checkpoint for the npz vs frame paths."""
+    checkpoint for the npz vs frame paths.
+
+    On top of the flat host-copy counter (``bytes``/``events``,
+    semantics unchanged), the meter tracks the two PCIe directions the
+    checkpoint pipeline moves tensor bytes over:
+
+    * **D2H** — snapshot transfers off the device. ``wait_s`` is the
+      time a consumer actually blocked for the bytes and ``span_s`` the
+      issue-to-landed window, so ``d2h_overlap_ratio`` reports how much
+      of the transfer hid behind compute (1.0 = fully overlapped).
+    * **H2D** — recovery-replay uploads back onto the device. These
+      were invisible before: recovery stacked payloads with jnp and the
+      implicit transfer never hit any counter, so benchmarks could not
+      report replay bandwidth honestly.
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
+        self._zero()
+
+    def _zero(self) -> None:
         self.bytes = 0
         self.events = 0
+        self.h2d_bytes = 0
+        self.h2d_events = 0
+        self.d2h_bytes = 0
+        self.d2h_events = 0
+        self.d2h_wait_s = 0.0
+        self.d2h_span_s = 0.0
 
     def add(self, nbytes: int) -> None:
         with self._lock:
             self.bytes += int(nbytes)
             self.events += 1
 
+    def add_h2d(self, nbytes: int) -> None:
+        """Replay-path host-to-device upload of checkpoint payloads."""
+        with self._lock:
+            self.h2d_bytes += int(nbytes)
+            self.h2d_events += 1
+
+    def add_d2h(self, nbytes: int, *, wait_s: float = 0.0,
+                span_s: float = 0.0) -> None:
+        """Snapshot device-to-host transfer. ``wait_s``: time the
+        consumer blocked; ``span_s``: issue-to-landed window."""
+        with self._lock:
+            self.d2h_bytes += int(nbytes)
+            self.d2h_events += 1
+            self.d2h_wait_s += float(wait_s)
+            self.d2h_span_s += float(span_s)
+
+    def d2h_overlap_ratio(self) -> Optional[float]:
+        """Fraction of the D2H transfer window hidden behind compute
+        (None until a metered transfer recorded its span)."""
+        with self._lock:
+            if self.d2h_span_s <= 0.0:
+                return None
+            return max(0.0, 1.0 - self.d2h_wait_s / self.d2h_span_s)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            out = {"bytes": self.bytes, "events": self.events,
+                   "h2d_bytes": self.h2d_bytes,
+                   "h2d_events": self.h2d_events,
+                   "d2h_bytes": self.d2h_bytes,
+                   "d2h_events": self.d2h_events,
+                   "d2h_wait_s": self.d2h_wait_s,
+                   "d2h_span_s": self.d2h_span_s}
+        out["d2h_overlap_ratio"] = self.d2h_overlap_ratio()
+        return out
+
     def reset(self) -> None:
         with self._lock:
-            self.bytes = 0
-            self.events = 0
+            self._zero()
 
 
 COPY_METER = CopyMeter()

@@ -41,6 +41,8 @@ FLAG_MAP: Dict[str, tuple] = {
     "fold_interval": ("engine", "fold_interval"),
     "fold_amplification": ("engine", "fold_amplification"),
     "replay_window": ("engine", "replay_window"),
+    "replay_device": ("engine", "replay_device"),
+    "snapshot_shards": ("engine", "snapshot_shards"),
     "maintenance": ("engine", "maintenance"),
     "gc_slice": ("engine", "gc_slice"),
     "merge_slice": ("engine", "merge_slice"),
@@ -86,6 +88,8 @@ class EngineConfig:
     fold_interval: int = 16
     fold_amplification: float = 1.5
     replay_window: int = 0
+    replay_device: bool = False   #: scan compressed payloads on device
+    snapshot_shards: int = 4      #: 0 = whole-tree D2H, >0 = per-shard
     maintenance: bool = False
     gc_slice: int = 64
     merge_slice: int = 64
@@ -128,9 +132,10 @@ class EngineConfig:
             if scope != "engine":
                 continue
             kw[field] = flag(dest, defaults[field])
-        # the maintenance flag is an on/off choice on the CLI
-        if isinstance(kw.get("maintenance"), str):
-            kw["maintenance"] = kw["maintenance"] == "on"
+        # bool knobs are on/off choices on the CLI
+        for b in ("maintenance", "replay_device"):
+            if isinstance(kw.get(b), str):
+                kw[b] = kw[b] == "on"
         root = flag("ckpt_dir", None)
         store = None
         if root:
@@ -215,7 +220,9 @@ def make_engine(cfg: EngineConfig, model, store=None):
                        batch_size=cfg.batch_size or None,
                        compressor=cfg.compressor,
                        sys_params=SystemParams(),
-                       replay_window=cfg.replay_window or None)
+                       replay_window=cfg.replay_window or None,
+                       replay_device=cfg.replay_device,
+                       snapshot_shards=cfg.snapshot_shards)
     if cfg.strategy == "lowdiff_plus":
         return LowDiffPlus(model, store, lr=cfg.lr,
                            persist_interval=cfg.batch_size or 1,

@@ -48,7 +48,9 @@ class LowDiff:
                  parallel_recovery: bool = True,
                  error_feedback: bool = True, compressor: str = "topk",
                  flush_timeout: float = 120.0,
-                 replay_window: Optional[int] = None):
+                 replay_window: Optional[int] = None,
+                 replay_device: bool = False,
+                 snapshot_shards: int = 4):
         self.model, self.store = model, store
         self.rho, self.lr = rho, lr
         if compressor == "quant8":
@@ -58,6 +60,13 @@ class LowDiff:
         #: bound on differentials per parallel-replay scan window (peak
         #: replay memory is O(window * model), not O(chain * model))
         self.replay_window = replay_window
+        #: device-resident recovery: replay the chain as a jitted scan
+        #: over the *compressed* payloads (fused decompress-and-apply
+        #: kernels) instead of host-decoding each differential
+        self.replay_device = replay_device
+        #: >0: full-state snapshots issue per-shard D2H transfers that
+        #: overlap the still-running step; 0: legacy whole-tree batch
+        self.snapshot_shards = snapshot_shards
         self.flush_timeout = flush_timeout
         self.tuner = OnlineTuner(sys_params or SystemParams())
         fi, bs = practical_config(self.tuner.p)
@@ -172,8 +181,14 @@ class LowDiff:
         if step % self.full_interval == 0:
             # async snapshot: only enqueue the D2H transfers here — the
             # wait for the bytes (and the write) happens on the persist
-            # thread, overlapped with the next training step
-            pending = self._arena.snapshot_async(state)
+            # thread, overlapped with the next training step; sharded
+            # mode additionally releases each shard's buffers as its
+            # bytes land instead of pinning the whole model copy
+            if self.snapshot_shards > 0:
+                pending = self._arena.snapshot_sharded_async(
+                    state, shards=self.snapshot_shards)
+            else:
+                pending = self._arena.snapshot_async(state)
             self._pending.append(
                 self._persist_pool.submit(self._persist_full, step, pending))
             self.full_saves += 1
@@ -228,25 +243,36 @@ class LowDiff:
         # at the first step gap (a write-back hole) rather than replay
         # across it into silently wrong state
         diffs = rec.contiguous_prefix(int(state["step"]), diffs)
-        if self.parallel_recovery:
-            params, opt = rec.replay_parallel(state["params"], state["opt"],
-                                              diffs, lr=self.lr,
-                                              window=self.replay_window)
+        if self.replay_device:
+            params, opt, applied = rec.replay_device(
+                state["params"], state["opt"], diffs, lr=self.lr,
+                window=self.replay_window)
+        elif self.parallel_recovery:
+            params, opt, applied = rec.replay_parallel(
+                state["params"], state["opt"], diffs, lr=self.lr,
+                window=self.replay_window)
         else:
             params, opt = rec.replay_serial(state["params"], state["opt"],
                                             diffs, lr=self.lr)
+            applied = len(diffs)
         state["params"], state["opt"] = params, opt
-        if diffs:
-            state["step"] = np.asarray(diffs[-1][0], np.int32)
+        if applied:
+            # a payload that failed to decode cut the chain early; the
+            # state is consistent as of the last *applied* differential
+            state["step"] = np.asarray(diffs[applied - 1][0], np.int32)
         # NOTE: the error-feedback state stored in the full checkpoint is
         # stale by `len(diffs)` steps; exact-resume tests therefore compare
         # params/opt. (The paper has the same property: EF lives only in
         # the training process.)
-        return state, len(diffs)
+        return state, applied
 
     def stats(self) -> Dict[str, Any]:
+        from repro.checkpoint.io import COPY_METER
         return {"queue": self.queue.stats(), "store": self.store.stats(),
                 "snapshot_arena": self._arena.stats(),
+                "copy_meter": COPY_METER.stats(),
+                "replay_device": self.replay_device,
+                "snapshot_shards": self.snapshot_shards,
                 "full_interval": self.full_interval,
                 "batch_size": self.batch_size,
                 "tuning": {"auto": {"full_interval": self._auto_full_interval,

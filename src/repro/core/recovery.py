@@ -12,6 +12,14 @@ affine, so we parallelize them *exactly* with an associative scan
 drop out of one ``lax.associative_scan``, every step's param delta is then
 computed in parallel, and a single sum produces M_n. This is the paper's
 log(n) recovery without its approximation.
+
+Device-resident replay (``replay_device``) goes one step further: the
+compressed payloads themselves are staged to the device — a fraction of
+the dense bytes over the interconnect — and a single jitted
+``lax.scan`` decodes and applies each differential with the fused
+decompress-and-apply kernels (``kernels.replay``); no dense gradient
+stack ever exists on host or in HBM, and window N+1's payloads upload
+while window N scans (double-buffered H2D staging).
 """
 from __future__ import annotations
 
@@ -21,8 +29,8 @@ from typing import Any, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.compression.sparse import SparseGrad, decompress_tree
-from repro.optim.adam import AdamState, adam_update
+from repro.compression.sparse import SparseGrad
+from repro.optim.adam import AdamState
 
 
 def load_latest_chain(store):
@@ -105,14 +113,49 @@ def maybe_decompress(payload):
     return payload
 
 
+def _use_pallas() -> bool:
+    # Pallas kernels compile natively on TPU; on CPU (interpret mode is
+    # trace-speed) the jnp oracles inside the same jitted program are
+    # the fast path and compute identical bits.
+    return jax.default_backend() == "tpu"
+
+
+def _fused_step(params, mu, nu, hyper, payload, use_pallas: bool):
+    """Apply one differential — still in wire form — to every leaf via
+    the fused decompress-and-apply kernels. Shared by serial replay and
+    the device-resident scan so the two are bit-identical."""
+    from repro.kernels import ops
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(payload, is_leaf=_is_compressed)
+    if len(g_leaves) != len(p_leaves):
+        raise ValueError(
+            f"differential has {len(g_leaves)} leaves, model has "
+            f"{len(p_leaves)}")
+    out = [ops.fused_decode_apply(g, p, m, v, hyper, use_pallas=use_pallas)
+           for g, p, m, v in zip(g_leaves, p_leaves,
+                                 jax.tree.leaves(mu), jax.tree.leaves(nu))]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]),
+            jax.tree.unflatten(treedef, [o[2] for o in out]))
+
+
 def replay_serial(params, opt: AdamState, diffs: List[Tuple[int, Any]], *,
                   lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
-    """Apply each differential in order. diffs: [(step, payload)]."""
+    """Apply each differential in order. diffs: [(step, payload)].
+
+    Each step runs the fused decompress-and-apply path: the compressed
+    payload is decoded *inside* the jitted Adam update (no dense host
+    intermediate), which makes serial replay the bit-exact reference
+    for ``replay_device`` — both execute the same per-element program.
+    """
+    from repro.kernels import ops
+    mu, nu, count = opt.mu, opt.nu, opt.count
+    up = _use_pallas()
     for _, payload in diffs:
-        g = maybe_decompress(payload)
-        params, opt = adam_update(params, g, opt, lr=lr, b1=b1, b2=b2,
-                                  eps=eps)
-    return params, opt
+        count = count + 1
+        hyper = ops.adam_hyper_traced(lr, b1, b2, eps, count)
+        params, mu, nu = _fused_step(params, mu, nu, hyper, payload, up)
+    return params, AdamState(mu, nu, jnp.asarray(count, jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("b1", "b2", "eps"))
@@ -154,6 +197,22 @@ def _parallel_replay(params, mu0, nu0, stacked, count0, lr, *,
     return p2, mu2, nu2
 
 
+def _decode_prefix(diffs: List[Tuple[int, Any]]):
+    """Host-decode payloads in order, stopping at the first failure.
+    Returns (dense grads for the longest decodable prefix, error or
+    None) — ``contiguous_prefix`` semantics for *payload* corruption:
+    a bad differential at position k cuts the chain at k instead of
+    raising mid-replay and losing the whole recovery."""
+    gs, err = [], None
+    for _, payload in diffs:
+        try:
+            gs.append(maybe_decompress(payload))
+        except Exception as e:          # decode failure, any backend
+            err = e
+            break
+    return gs, err
+
+
 def replay_parallel(params, opt: AdamState, diffs: List[Tuple[int, Any]], *,
                     lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
                     window: Optional[int] = None):
@@ -169,22 +228,167 @@ def replay_parallel(params, opt: AdamState, diffs: List[Tuple[int, Any]], *,
     window's scan is seeded with the previous window's final moments),
     so the result is numerically identical up to the same float
     reassociation the unwindowed scan already accepts. ``None`` (or 0)
-    replays everything in one window."""
+    replays everything in one window.
+
+    Each window is host-decoded *before* its scan launches; a payload
+    that fails to decode cuts the chain there — the state replayed so
+    far is returned rather than thrown away. Returns
+    ``(params, opt, applied)`` with ``applied`` the number of
+    differentials actually replayed (== ``len(diffs)`` when the whole
+    chain was clean)."""
+    from repro.checkpoint.io import COPY_METER
     if not diffs:
-        return params, opt
+        return params, opt, 0
     if window is not None and window < 0:
         raise ValueError("window must be None or >= 0")
     w = int(window) if window else len(diffs)
     mu, nu, count = opt.mu, opt.nu, opt.count
+    applied = 0
     for i in range(0, len(diffs), w):
-        gs = [maybe_decompress(p) for _, p in diffs[i:i + w]]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(
-            [x.astype(jnp.float32) for x in xs]), *gs)
-        params, mu, nu = _parallel_replay(params, mu, nu, stacked,
-                                          count, jnp.float32(lr),
-                                          b1=b1, b2=b2, eps=eps)
-        count = count + len(gs)
-    return params, AdamState(mu, nu, count)
+        gs, err = _decode_prefix(diffs[i:i + w])
+        if gs:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(
+                [x.astype(jnp.float32) for x in xs]), *gs)
+            COPY_METER.add_h2d(sum(l.nbytes
+                                   for l in jax.tree.leaves(stacked)))
+            params, mu, nu = _parallel_replay(params, mu, nu, stacked,
+                                              count, jnp.float32(lr),
+                                              b1=b1, b2=b2, eps=eps)
+            count = count + len(gs)
+            applied += len(gs)
+        if err is not None:
+            break
+    return params, AdamState(mu, nu, count), applied
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b1", "b2", "eps", "use_pallas"))
+def _device_replay(p_leaves, mu_leaves, nu_leaves, g_stacks, count0, lr, *,
+                   b1=0.9, b2=0.999, eps=1e-8, use_pallas=False):
+    """One jitted scan over a window of *compressed* payloads: each scan
+    step slices one differential off the stacked wire buffers and runs
+    the fused decompress-and-apply kernel per leaf — the dense gradient
+    never exists outside the kernel accumulator. Leaf lists (not trees)
+    because the payload containers are themselves pytree nodes."""
+    from repro.kernels import ops
+
+    def body(carry, gs):
+        ps, mus, nus, c = carry
+        c = c + 1
+        hyper = ops.adam_hyper_traced(lr, b1, b2, eps, c)
+        out = [ops.fused_decode_apply(g, p, m, v, hyper,
+                                      use_pallas=use_pallas)
+               for g, p, m, v in zip(gs, ps, mus, nus)]
+        return ([o[0] for o in out], [o[1] for o in out],
+                [o[2] for o in out], c), None
+
+    init = (list(p_leaves), list(mu_leaves), list(nu_leaves),
+            jnp.asarray(count0, jnp.int32))
+    (p2, mu2, nu2, c2), _ = jax.lax.scan(body, init, tuple(g_stacks))
+    return p2, mu2, nu2, c2
+
+
+def _check_wire(payload) -> None:
+    """Cheap consistency check of a payload's wire containers: the
+    block-row count must match the dense shape the container claims to
+    decode to — the device path never materializes the dense form, so a
+    truncated/corrupt container would otherwise surface as a shape
+    error deep inside the jitted scan instead of a clean chain cut."""
+    import numpy as np
+    for leaf in jax.tree.leaves(payload, is_leaf=_is_compressed):
+        if not _is_compressed(leaf):
+            continue
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        nb = -(-n // leaf.block)            # ceil div
+        lead = getattr(leaf, "values", None)
+        lead = leaf.q if lead is None else lead
+        if lead.shape[0] != nb:
+            raise ValueError(
+                f"corrupt differential: {lead.shape[0]} block rows for "
+                f"shape {leaf.shape} (expected {nb})")
+
+
+def _stage_window(diffs: List[Tuple[int, Any]]):
+    """H2D-stage a window's payloads in wire form. Uploads each
+    differential's compressed buffers to the device (async
+    ``device_put`` under the hood — the transfer overlaps whatever scan
+    is already running) and stacks them along a leading axis for
+    ``lax.scan``. A payload that fails to stage cuts the window there
+    (``contiguous_prefix`` semantics). Returns
+    ``(stacked | None, n_staged, error | None)``."""
+    from repro.checkpoint.io import COPY_METER
+    staged, err, template = [], None, None
+    nbytes = 0
+    for _, payload in diffs:
+        try:
+            _check_wire(payload)
+            dev = jax.tree.map(jnp.asarray, payload)
+            tdef = jax.tree.structure(dev)
+            if template is None:
+                template = tdef
+            elif tdef != template:
+                raise ValueError("differential structure changed "
+                                 "mid-window")
+            nbytes += sum(l.nbytes for l in jax.tree.leaves(dev))
+            staged.append(dev)
+        except Exception as e:
+            err = e
+            break
+    if not staged:
+        return None, 0, err
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *staged)
+    COPY_METER.add_h2d(nbytes)
+    return stacked, len(staged), err
+
+
+def replay_device(params, opt: AdamState, diffs: List[Tuple[int, Any]], *,
+                  lr=1e-3, b1=0.9, b2=0.999, eps=1e-8,
+                  window: Optional[int] = None,
+                  use_pallas: Optional[bool] = None):
+    """Device-resident serial-exact replay: payloads cross the
+    interconnect compressed (ρ·dense bytes instead of dense fp32), and
+    one jitted scan per window decodes-and-applies them with the fused
+    kernels. Bit-identical to :func:`replay_serial` — same per-element
+    program, different orchestration.
+
+    Windows are double-buffered: window N's scan is dispatched
+    asynchronously, then window N+1's payloads stage H2D while it runs.
+    A payload that fails to decode/stage cuts the chain at that diff.
+    Returns ``(params, opt, applied)``."""
+    if not diffs:
+        return params, opt, 0
+    if window is not None and window < 0:
+        raise ValueError("window must be None or >= 0")
+    w = int(window) if window else len(diffs)
+    up = _use_pallas() if use_pallas is None else use_pallas
+    p_leaves, treedef = jax.tree.flatten(params)
+    mu_l = jax.tree.leaves(opt.mu)
+    nu_l = jax.tree.leaves(opt.nu)
+    count = jnp.asarray(opt.count, jnp.int32)
+    applied = 0
+    windows = [diffs[i:i + w] for i in range(0, len(diffs), w)]
+    nxt = _stage_window(windows[0])
+    for i in range(len(windows)):
+        stacked, n, err = nxt
+        if n:
+            g_stacks = jax.tree.leaves(stacked, is_leaf=_is_compressed)
+            try:
+                p_leaves, mu_l, nu_l, count = _device_replay(
+                    p_leaves, mu_l, nu_l, g_stacks, count,
+                    jnp.float32(lr), b1=b1, b2=b2, eps=eps, use_pallas=up)
+                applied += n
+            except Exception as e:      # structure/shape mismatch
+                err = e
+        if err is not None:
+            break
+        if i + 1 < len(windows):
+            # double buffer: the scan above was dispatched async; the
+            # next window's (compressed, hence small) H2D runs under it
+            nxt = _stage_window(windows[i + 1])
+    return (jax.tree.unflatten(treedef, p_leaves),
+            AdamState(jax.tree.unflatten(treedef, mu_l),
+                      jax.tree.unflatten(treedef, nu_l), count),
+            applied)
 
 
 def merge_deltas_pairwise(deltas: List[Any]) -> Any:

@@ -24,7 +24,8 @@ memory; the arena owns the lifetime and the bound).
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -101,6 +102,110 @@ class PendingSnapshot:
         self.release()
 
 
+def _partition_leaves(nbytes: List[int], shards: int) -> List[List[int]]:
+    """Split leaf positions into up to ``shards`` contiguous groups of
+    roughly equal bytes (contiguity preserves the producer's layer
+    order, so shard 0 holds the leaves the backward pass finishes
+    first and its D2H can start while later layers still compute)."""
+    if not nbytes:
+        return []
+    shards = max(1, min(int(shards), len(nbytes)))
+    weights = nbytes if sum(nbytes) else [1] * len(nbytes)
+    total = sum(weights)
+    groups: List[List[int]] = [[]]
+    acc = 0
+    for i, w in enumerate(weights):
+        if (groups[-1] and len(groups) < shards
+                and acc >= total * len(groups) / shards):
+            groups.append([])
+        groups[-1].append(i)
+        acc += w
+    return groups
+
+
+class ShardedPendingSnapshot:
+    """Per-shard overlapped D2H snapshot (§V-B step ① at DMA grain).
+
+    The tree's leaves are partitioned into contiguous byte-balanced
+    shards and each shard's ``copy_to_host_async`` descriptors are
+    enqueued immediately at construction — on TPU the transfers drain
+    behind the still-running step (issue order matches the backward
+    pass's layer order, so a shard's DMA starts as soon as its grads
+    are available rather than after the whole post-step batch).
+
+    ``result()`` (persist thread) then materializes shard by shard and
+    *releases each shard's device references as soon as its bytes
+    land* — the donation analogue: the runtime can reuse a shard's
+    staging memory while later shards are still in flight, instead of
+    the whole model's worth of buffers pinning until the last leaf.
+    The residual block time per shard vs the issue-to-landed window is
+    reported to :data:`COPY_METER` as the measured overlap ratio.
+    """
+
+    def __init__(self, tree, shards: int = 4,
+                 arena: Optional["SnapshotArena"] = None):
+        self._leaves, self._treedef = jax.tree.flatten(tree)
+        sizes = [getattr(l, "nbytes", 0) or 0 for l in self._leaves]
+        self._groups = _partition_leaves(sizes, shards)
+        self._arena = arena
+        self._host: Any = None
+        self._done = False
+        self._lock = threading.Lock()
+        self._issued_at = time.perf_counter()
+        for group in self._groups:      # chunked issue, shard order
+            for i in group:
+                leaf = self._leaves[i]
+                if isinstance(leaf, jax.Array):
+                    try:
+                        leaf.copy_to_host_async()
+                    except AttributeError:
+                        pass
+
+    @property
+    def shards(self) -> int:
+        return len(self._groups)
+
+    def result(self):
+        with self._lock:
+            if self._done:
+                return self._host
+            host: List[Any] = list(self._leaves)
+            wait = 0.0
+            nbytes = 0
+            for group in self._groups:
+                t0 = time.perf_counter()
+                for i in group:
+                    host[i] = np.asarray(self._leaves[i])
+                    self._leaves[i] = None     # early release: the
+                    # shard's device/staging buffers free while later
+                    # shards are still transferring
+                    if isinstance(host[i], np.ndarray):
+                        nbytes += host[i].nbytes
+                wait += time.perf_counter() - t0
+            span = time.perf_counter() - self._issued_at
+            COPY_METER.add(nbytes)             # the one metered host copy
+            COPY_METER.add_d2h(nbytes, wait_s=wait, span_s=span)
+            self._host = jax.tree.unflatten(self._treedef, host)
+            self._leaves = []
+            self._done = True
+            return self._host
+
+    def release(self) -> None:
+        with self._lock:
+            self._leaves = []
+            self._host = None
+            self._done = True
+        if self._arena is not None:
+            self._arena._release()
+            self._arena = None
+
+    def __enter__(self):
+        return self.result()
+
+    def __exit__(self, *exc):
+        self.release()
+
+
 class SnapshotArena:
     """Double-buffered snapshot permits.
 
@@ -108,6 +213,9 @@ class SnapshotArena:
     :class:`PendingSnapshot`; it blocks only when ``slots`` snapshots
     are already in flight (persist tier behind by two full states) —
     bounded memory, no unbounded queue of model copies.
+    ``snapshot_sharded_async`` is the per-shard variant: same permit
+    semantics, but the transfers issue and land shard by shard so the
+    D2H overlaps the still-running step and buffers release early.
     """
 
     def __init__(self, slots: int = 2):
@@ -119,14 +227,22 @@ class SnapshotArena:
         self.snapshots = 0
         self.stalls = 0
 
-    def snapshot_async(self, tree) -> PendingSnapshot:
+    def _acquire(self) -> None:
         if not self._sem.acquire(blocking=False):
             with self._lock:
                 self.stalls += 1
             self._sem.acquire()
         with self._lock:
             self.snapshots += 1
+
+    def snapshot_async(self, tree) -> PendingSnapshot:
+        self._acquire()
         return PendingSnapshot(tree, arena=self)
+
+    def snapshot_sharded_async(self, tree,
+                               shards: int = 4) -> ShardedPendingSnapshot:
+        self._acquire()
+        return ShardedPendingSnapshot(tree, shards=shards, arena=self)
 
     def _release(self) -> None:
         self._sem.release()

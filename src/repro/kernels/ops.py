@@ -15,11 +15,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compression.packed import PackedDiff
+from repro.compression.quant import QuantGrad
 from repro.compression.sparse import BLOCK, SparseGrad, _pad_len, k_for
 from repro.kernels import fused_adam as _fa
 from repro.kernels import pack as _pk
 from repro.kernels import quant8 as _q8
 from repro.kernels import ref as _ref
+from repro.kernels import replay as _rp
 from repro.kernels import topk as _tk
 
 
@@ -113,7 +115,121 @@ def quant_compress(x: jax.Array, *, block: int = BLOCK,
 def adam_hyper(lr, b1, b2, eps, count) -> jax.Array:
     c1 = 1.0 - b1 ** count
     c2 = 1.0 - b2 ** count
-    return jnp.asarray([[lr, b1, b2, eps, c1, c2, 0.0, 0.0]], jnp.float32)
+    return jnp.asarray([[lr, b1, b2, eps, c1, c2, 1.0 - b1, 1.0 - b2]],
+                       jnp.float32)
+
+
+def adam_hyper_traced(lr, b1, b2, eps, count) -> jax.Array:
+    """Traced variant of :func:`adam_hyper` for use inside jitted
+    replay: the bias corrections are computed with the *same* f32 jnp
+    ops as ``optim.adam.adam_update``, and the moment complements
+    ``1-b1`` / ``1-b2`` are pre-rounded from python doubles exactly as
+    the eager update's scalar promotion rounds them (recomputing
+    ``1.0f - b1f`` on device is off by one ulp, which would break the
+    device-replay == serial-replay bit-identity). ``count`` is the
+    *post-increment* step count, i.e. ``state.count + 1``."""
+    cf = jnp.asarray(count).astype(jnp.float32)
+    c1 = 1.0 - b1 ** cf
+    c2 = 1.0 - b2 ** cf
+    row = jnp.stack([jnp.float32(lr), jnp.float32(b1), jnp.float32(b2),
+                     jnp.float32(eps), c1.astype(jnp.float32),
+                     c2.astype(jnp.float32), jnp.float32(1.0 - b1),
+                     jnp.float32(1.0 - b2)])
+    return row.reshape(1, 8)
+
+
+def _unblock(x: jax.Array, shape, dt):
+    n = int(np.prod(shape)) if shape else 1
+    return x.reshape(-1)[:n].reshape(shape).astype(dt)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def fused_sparse_apply(sg: SparseGrad, p: jax.Array, mu: jax.Array,
+                       nu: jax.Array, hyper: jax.Array, *,
+                       use_pallas: bool = True):
+    """Fused decompress-and-apply for a top-k differential: scatter the
+    wire (values, indices) straight into the Adam update — no dense
+    gradient is ever materialized outside the kernel's accumulator."""
+    shape, block = p.shape, sg.block
+    pb, _ = _to_blocks(p, block)
+    mub, _ = _to_blocks(mu, block)
+    nub, _ = _to_blocks(nu, block)
+    rpad = pb.shape[0] - sg.values.shape[0]
+    vals = jnp.pad(sg.values, ((0, rpad), (0, 0)))
+    idx = jnp.pad(sg.indices, ((0, rpad), (0, 0)))
+    if use_pallas:
+        p2, mu2, nu2 = _rp.topk_apply(vals, idx, pb, mub, nub, hyper,
+                                      block=block, interpret=_interpret())
+    else:
+        p2, mu2, nu2 = _ref.topk_apply_ref(vals, idx, pb, mub, nub, hyper,
+                                           block=block)
+    return (_unblock(p2, shape, p.dtype), _unblock(mu2, shape, jnp.float32),
+            _unblock(nu2, shape, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def fused_packed_apply(pd: PackedDiff, p: jax.Array, mu: jax.Array,
+                       nu: jax.Array, hyper: jax.Array, *,
+                       use_pallas: bool = True):
+    """Fused decompress-and-apply for a packed (int8 top-k) differential:
+    dequantize + scatter + Adam in one pass over the wire buffers."""
+    shape, block = p.shape, pd.block
+    pb, _ = _to_blocks(p, block)
+    mub, _ = _to_blocks(mu, block)
+    nub, _ = _to_blocks(nu, block)
+    rpad = pb.shape[0] - pd.q.shape[0]
+    q = jnp.pad(pd.q, ((0, rpad), (0, 0)))
+    idx = jnp.pad(pd.indices, ((0, rpad), (0, 0)))
+    scale = jnp.pad(pd.scale, ((0, rpad), (0, 0)))
+    if use_pallas:
+        p2, mu2, nu2 = _rp.packed_apply(q, idx, scale, pb, mub, nub, hyper,
+                                        block=block, interpret=_interpret())
+    else:
+        p2, mu2, nu2 = _ref.packed_apply_ref(q, idx, scale, pb, mub, nub,
+                                             hyper, block=block)
+    return (_unblock(p2, shape, p.dtype), _unblock(mu2, shape, jnp.float32),
+            _unblock(nu2, shape, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def fused_quant_apply(qg: QuantGrad, p: jax.Array, mu: jax.Array,
+                      nu: jax.Array, hyper: jax.Array, *,
+                      use_pallas: bool = True):
+    """Fused decompress-and-apply for a quant8 differential: dequantize
+    the int8 blocks against their scales inside the Adam pass."""
+    shape, block = p.shape, qg.block
+    pb, _ = _to_blocks(p, block)
+    mub, _ = _to_blocks(mu, block)
+    nub, _ = _to_blocks(nu, block)
+    rpad = pb.shape[0] - qg.q.shape[0]
+    q = jnp.pad(qg.q, ((0, rpad), (0, 0)))
+    scale = jnp.pad(qg.scale.reshape(-1, 1), ((0, rpad), (0, 0)))
+    if use_pallas:
+        p2, mu2, nu2 = _rp.quant_apply(q, scale, pb, mub, nub, hyper,
+                                       interpret=_interpret())
+    else:
+        p2, mu2, nu2 = _ref.quant_apply_ref(q, scale, pb, mub, nub, hyper)
+    return (_unblock(p2, shape, p.dtype), _unblock(mu2, shape, jnp.float32),
+            _unblock(nu2, shape, jnp.float32))
+
+
+def fused_decode_apply(payload, p, mu, nu, hyper, *,
+                       use_pallas: bool = True):
+    """Apply one compressed differential to (p, mu, nu) without a host
+    decompress or a dense intermediate: dispatches on the wire container
+    type to the matching fused kernel; dense arrays fall back to
+    :func:`fused_adam_update`."""
+    if isinstance(payload, SparseGrad):
+        return fused_sparse_apply(payload, p, mu, nu, hyper,
+                                  use_pallas=use_pallas)
+    if isinstance(payload, PackedDiff):
+        return fused_packed_apply(payload, p, mu, nu, hyper,
+                                  use_pallas=use_pallas)
+    if isinstance(payload, QuantGrad):
+        return fused_quant_apply(payload, p, mu, nu, hyper,
+                                 use_pallas=use_pallas)
+    return fused_adam_update(p, jnp.asarray(payload), mu, nu, hyper,
+                             use_pallas=use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

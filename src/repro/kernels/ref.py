@@ -58,3 +58,43 @@ def adam_tile_update_ref(p, g, mu, nu, hyper):
     nu2 = b2 * nu + (1.0 - b2) * gf * gf
     step = lr * (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
     return (pf - step).astype(p.dtype), mu2, nu2
+
+
+# ---------------- fused decompress-and-apply (replay path) -----------------
+
+def adam_replay_update_ref(p, g, mu, nu, hyper):
+    """Adam tail for the replay kernels: identical to
+    ``adam_tile_update_ref`` except the moment complements come from
+    hyper slots 6/7 (pre-rounded ``1-b1`` / ``1-b2``), matching
+    ``optim.adam.adam_update`` bit for bit."""
+    lr, b1, b2, eps, c1, c2, om1, om2 = (hyper[0, i] for i in range(8))
+    pf, gf = p.astype(jnp.float32), g.astype(jnp.float32)
+    mu2 = b1 * mu + om1 * gf
+    nu2 = b2 * nu + om2 * gf * gf
+    step = lr * (mu2 / c1) / (jnp.sqrt(nu2 / c2) + eps)
+    return (pf - step).astype(p.dtype), mu2, nu2
+
+
+def topk_apply_ref(vals, idxs, p, mu, nu, hyper, *, block: int):
+    """Scatter-decode a top-k wire payload and apply one Adam step —
+    oracle for ``replay.topk_apply`` (decode math == the host
+    decompressors', update == ``optim.adam.adam_update``)."""
+    nb, k = vals.shape
+    g = jnp.zeros((nb, block), jnp.float32)
+    g = jax.vmap(lambda o, i, v: o.at[i].add(v))(
+        g, idxs, vals.astype(jnp.float32))
+    return adam_replay_update_ref(p, g, mu, nu, hyper)
+
+
+def packed_apply_ref(q, idxs, scale, p, mu, nu, hyper, *, block: int):
+    """Dequant + scatter-decode a packed (int8 top-k) payload and apply
+    one Adam step — oracle for ``replay.packed_apply``."""
+    vals = q.astype(jnp.float32) * scale
+    return topk_apply_ref(vals, idxs, p, mu, nu, hyper, block=block)
+
+
+def quant_apply_ref(q, scale, p, mu, nu, hyper):
+    """Dequant a quant8 payload and apply one Adam step — oracle for
+    ``replay.quant_apply``. q: (nb, block) int8; scale: (nb, 1) f32."""
+    g = q.astype(jnp.float32) * scale
+    return adam_replay_update_ref(p, g, mu, nu, hyper)

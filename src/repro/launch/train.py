@@ -222,6 +222,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="differentials per parallel-replay scan window; "
                          "bounds peak recovery memory to O(window * "
                          "model) (0 = one window)")
+    ap.add_argument("--replay-device", choices=("on", "off"), default="off",
+                    help="device-resident recovery: stage the compressed "
+                         "payloads H2D and replay the chain as one jitted "
+                         "scan through the fused decompress-and-apply "
+                         "kernels (bit-identical to serial replay)")
+    ap.add_argument("--snapshot-shards", type=int, default=4,
+                    help="per-shard overlapped D2H snapshot transfers; "
+                         "each shard's buffers release as its bytes land "
+                         "(0 = legacy whole-tree batch copy)")
     ap.add_argument("--gc-slice", type=int, default=64,
                     help="keys swept per journaled GC slice (bounded "
                          "work between progress records)")

@@ -1,0 +1,355 @@
+"""Device-resident recovery fast path: fused decompress-and-apply
+kernel parity, device-replay == serial-replay bit-identity (including
+through every storage backend), chain-cut semantics on corrupt
+payloads, and the overlapped per-shard snapshot DMA."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import StoreConfig, make_store
+from repro.checkpoint.io import COPY_METER
+from repro.checkpoint.remote import FakeObjectStore, RemoteObjectBackend
+from repro.checkpoint.store import CheckpointStore
+from repro.compression.packed import PackedDiff
+from repro.compression.quant import QuantGrad, quant_compress
+from repro.compression.sparse import SparseGrad, compress_tree
+from repro.core import recovery as rec
+from repro.core.snapshot import (ShardedPendingSnapshot, SnapshotArena,
+                                 _partition_leaves, host_copy)
+from repro.kernels import ops
+from repro.optim.adam import AdamState, adam_update
+
+HYPER = dict(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8)
+
+
+def _grad(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _compress(kind, g, rho=0.05, block=256):
+    if kind == "topk":
+        return ops.topk_compress(g, rho, block=block)
+    if kind == "packed":
+        return ops.packed_compress(g, rho, block=block)
+    return quant_compress(g, block=block)
+
+
+def _state(rng, shape, dtype):
+    p = _grad(rng, shape, dtype)
+    mu = jnp.asarray(rng.standard_normal(shape), jnp.float32) * 0.1
+    nu = jnp.abs(jnp.asarray(rng.standard_normal(shape), jnp.float32)) * 0.01
+    return p, mu, nu
+
+
+def _bits(*arrays):
+    """f32/bf16-safe bit views for exact comparison."""
+    return [np.asarray(a).view(np.uint8) for a in arrays]
+
+
+# --------------------------------------------------------------------------
+# kernel parity: pallas interpret mode vs pure-jnp oracles, bit-exact
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kind", ["topk", "packed", "quant8"])
+@pytest.mark.parametrize("shape", [(2048,),    # 8 blocks, exact fit
+                                   (33, 77),   # odd tail, nb % 8 != 0
+                                   (5,)])      # single partial block
+def test_fused_apply_parity(dtype, kind, shape):
+    rng = np.random.default_rng(hash((kind, shape)) % 2**32)
+    p, mu, nu = _state(rng, shape, dtype)
+    payload = _compress(kind, _grad(rng, shape, dtype))
+    hyper = ops.adam_hyper_traced(count=3, **HYPER)
+    kernel = ops.fused_decode_apply(payload, p, mu, nu, hyper,
+                                    use_pallas=True)
+    oracle = ops.fused_decode_apply(payload, p, mu, nu, hyper,
+                                    use_pallas=False)
+    for a, b in zip(_bits(*kernel), _bits(*oracle)):
+        np.testing.assert_array_equal(a, b)
+    assert kernel[0].dtype == dtype
+    assert kernel[1].dtype == kernel[2].dtype == jnp.float32
+
+
+@pytest.mark.parametrize("kind", ["topk", "packed", "quant8"])
+def test_fused_apply_matches_decompress_then_adam(kind):
+    """The fused kernel == host decompress + the eager optimizer, to
+    float tolerance (bit-identity holds within jit, not across the
+    jit/eager boundary — XLA contracts the moment update into an fma)."""
+    rng = np.random.default_rng(7)
+    shape = (999,)
+    p, mu, nu = _state(rng, shape, jnp.float32)
+    payload = _compress(kind, _grad(rng, shape, jnp.float32))
+    hyper = ops.adam_hyper_traced(count=1, **HYPER)
+    p2, mu2, nu2 = ops.fused_decode_apply(payload, p, mu, nu, hyper,
+                                          use_pallas=True)
+    ep, est = adam_update({"w": p}, {"w": payload.dense()},
+                          AdamState({"w": mu}, {"w": nu},
+                                    jnp.zeros((), jnp.int32)), **HYPER)
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(ep["w"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mu2), np.asarray(est.mu["w"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nu2), np.asarray(est.nu["w"]),
+                               atol=1e-6)
+
+
+def test_fused_apply_empty_k():
+    """k == 0 wire rows (hand-built: ``k_for`` never emits 0) decode to
+    a zero gradient — pallas and oracle paths agree bitwise and match
+    the dense zero-gradient update."""
+    rng = np.random.default_rng(3)
+    p, mu, nu = _state(rng, (100,), jnp.float32)
+    hyper = ops.adam_hyper_traced(count=1, **HYPER)
+    empty = [
+        SparseGrad(jnp.zeros((1, 0), jnp.float32),
+                   jnp.zeros((1, 0), jnp.int32), (100,), 1024),
+        PackedDiff(jnp.zeros((1, 0), jnp.int8),
+                   jnp.zeros((1, 0), jnp.int32),
+                   jnp.zeros((1, 1), jnp.float32), (100,), 1024),
+    ]
+    want = None
+    for payload in empty:
+        got = {up: ops.fused_decode_apply(payload, p, mu, nu, hyper,
+                                          use_pallas=up)
+               for up in (True, False)}
+        for a, b in zip(_bits(*got[True]), _bits(*got[False])):
+            np.testing.assert_array_equal(a, b)
+        zero = ops.fused_adam_update(p, jnp.zeros_like(p), mu, nu, hyper,
+                                     use_pallas=False)
+        np.testing.assert_allclose(np.asarray(got[True][0]),
+                                   np.asarray(zero[0]), atol=1e-6)
+        if want is not None:    # both container kinds land on one result
+            for a, b in zip(_bits(*got[True]), want):
+                np.testing.assert_array_equal(a, b)
+        want = _bits(*got[True])
+
+
+# --------------------------------------------------------------------------
+# replay_device == replay_serial, bit-identical
+# --------------------------------------------------------------------------
+
+def _tree_state(rng, dtype=jnp.float32):
+    shapes = {"wq": (48, 64), "wk": (999,), "b": (7,)}
+    params = {k: _grad(rng, s, dtype) for k, s in shapes.items()}
+    mu = {k: jnp.zeros(s, jnp.float32) for k, s in shapes.items()}
+    nu = {k: jnp.zeros(s, jnp.float32) for k, s in shapes.items()}
+    return params, AdamState(mu, nu, jnp.zeros((), jnp.int32))
+
+
+def _chain(rng, params, kind, n, numpy_leaves=False):
+    diffs = []
+    for i in range(n):
+        payload = jax.tree.map(
+            lambda p: _compress(kind, _grad(rng, p.shape, jnp.float32)),
+            params)
+        if numpy_leaves:        # the form payloads take off storage
+            payload = jax.tree.map(np.asarray, payload)
+        diffs.append((i + 1, payload))
+    return diffs
+
+
+def assert_replay_bit_identical(p_a, o_a, p_b, o_b, msg=""):
+    for la, lb in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_array_equal(*_bits(la, lb), err_msg=msg)
+    for la, lb in zip(jax.tree.leaves((o_a.mu, o_a.nu)),
+                      jax.tree.leaves((o_b.mu, o_b.nu))):
+        np.testing.assert_array_equal(*_bits(la, lb), err_msg=msg)
+    assert int(o_a.count) == int(o_b.count), msg
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kind", ["topk", "packed", "quant8"])
+@pytest.mark.parametrize("window", [None, 3])
+def test_replay_device_bit_identical_to_serial(kind, window, dtype):
+    rng = np.random.default_rng(11)
+    params, opt = _tree_state(rng, dtype)
+    diffs = _chain(rng, params, kind, 7, numpy_leaves=True)
+    ps, os_ = rec.replay_serial(params, opt, diffs, **HYPER)
+    pd, od, n = rec.replay_device(params, opt, diffs, window=window,
+                                  **HYPER)
+    assert n == len(diffs)
+    assert_replay_bit_identical(ps, os_, pd, od,
+                                f"{kind} window={window} {dtype}")
+
+
+def test_replay_device_meters_h2d_and_empty_chain():
+    rng = np.random.default_rng(12)
+    params, opt = _tree_state(rng)
+    p0, o0, n0 = rec.replay_device(params, opt, [])
+    assert n0 == 0 and p0 is params and o0 is opt
+    diffs = _chain(rng, params, "topk", 4)
+    COPY_METER.reset()
+    _, _, n = rec.replay_device(params, opt, diffs, window=2)
+    assert n == 4
+    s = COPY_METER.stats()
+    # staged bytes == the containers' child arrays as uploaded (full
+    # flatten — containers are pytree nodes whose children are arrays)
+    wire = 4 * sum(np.asarray(l).nbytes
+                   for l in jax.tree.leaves(diffs[0][1]))
+    assert s["h2d_events"] == 2          # one per window
+    assert s["h2d_bytes"] == wire
+    # the compressed upload is a fraction of what the dense host path
+    # would have shipped (rho ~ 5% of fp32 leaves)
+    dense = 4 * sum(l.size * 4 for l in jax.tree.leaves(params))
+    assert s["h2d_bytes"] < dense // 4
+    COPY_METER.reset()
+
+
+# --------------------------------------------------------------------------
+# chain-cut semantics on corrupt payloads (host and device paths)
+# --------------------------------------------------------------------------
+
+def _corrupt(payload):
+    """Row-truncate one container: its block-row count no longer covers
+    the dense shape it claims — exactly what a torn write produces."""
+    def cut(leaf):
+        if isinstance(leaf, SparseGrad):
+            return SparseGrad(leaf.values[:-1], leaf.indices[:-1],
+                              leaf.shape, leaf.block)
+        return leaf
+    return jax.tree.map(cut, payload, is_leaf=rec._is_compressed)
+
+
+@pytest.mark.parametrize("bad_at", [0, 2, 5])
+def test_replay_cuts_chain_at_corrupt_diff(bad_at):
+    rng = np.random.default_rng(13)
+    params, opt = _tree_state(rng)
+    diffs = _chain(rng, params, "topk", 6)
+    diffs[bad_at] = (diffs[bad_at][0], _corrupt(diffs[bad_at][1]))
+    for fn in (rec.replay_parallel, rec.replay_device):
+        p, o, n = fn(params, opt, diffs, window=2, **HYPER)
+        assert n == bad_at, fn.__name__
+        assert int(o.count) == bad_at, fn.__name__
+    # the replayed prefix is the serial replay of the clean diffs
+    ps, os_ = rec.replay_serial(params, opt, diffs[:bad_at], **HYPER)
+    pd, od, _ = rec.replay_device(params, opt, diffs, window=2, **HYPER)
+    assert_replay_bit_identical(ps, os_, pd, od, f"prefix bad_at={bad_at}")
+
+
+def test_stage_window_rejects_structure_change():
+    rng = np.random.default_rng(14)
+    params, opt = _tree_state(rng)
+    diffs = _chain(rng, params, "topk", 3)
+    # diff 1 switches container type mid-chain (mixed compressor bug)
+    diffs[1] = (2, jax.tree.map(
+        lambda p: quant_compress(_grad(rng, p.shape, jnp.float32)), params))
+    _, _, n = rec.replay_device(params, opt, diffs, **HYPER)
+    assert n == 1
+
+
+# --------------------------------------------------------------------------
+# storage round-trip: device replay == serial replay on all 5 backends
+# --------------------------------------------------------------------------
+
+def mk_backend_store(tmp_path, kind):
+    root = str(tmp_path / kind)
+    if kind == "local":
+        return make_store(root)
+    if kind == "sharded":
+        return make_store(root, backend="sharded", shards=3)
+    if kind == "memory":
+        return make_store(root, backend="memory")
+    if kind == "remote":
+        be = RemoteObjectBackend(FakeObjectStore(), chunk_bytes=4096,
+                                 journal_root=root)
+        return CheckpointStore(backend=be)
+    if kind == "peer":
+        cfg = StoreConfig.from_legacy(
+            root, peers=2, peer_hub=f"dr_{os.path.basename(str(tmp_path))}",
+            simulate_peers=True)
+        return cfg.build()
+    raise AssertionError(kind)
+
+
+@pytest.mark.parametrize("kind", ["local", "sharded", "memory",
+                                  "remote", "peer"])
+def test_device_replay_bit_identical_across_backends(tmp_path, kind):
+    rng = np.random.default_rng(17)
+    params, opt = _tree_state(rng)
+    store = mk_backend_store(tmp_path, kind)
+    try:
+        # one chain per compressor, at disjoint step ranges (10*ci + 1..2)
+        for ci, comp in enumerate(("topk", "packed", "quant8")):
+            base = 10 * ci
+            for step, payload in _chain(rng, params, comp, 2):
+                store.save_diff(base + step, payload)
+            got = rec.contiguous_prefix(
+                base, [(s, p) for s, p in store.diffs_after(base)
+                       if s <= base + 2])
+            assert len(got) == 2
+            ps, os_ = rec.replay_serial(params, opt, got, **HYPER)
+            pd, od, n = rec.replay_device(params, opt, got, **HYPER)
+            assert n == 2
+            assert_replay_bit_identical(ps, os_, pd, od, f"{kind}/{comp}")
+    finally:
+        store.close()
+
+
+# --------------------------------------------------------------------------
+# overlapped per-shard snapshot DMA
+# --------------------------------------------------------------------------
+
+def test_partition_leaves():
+    assert _partition_leaves([], 4) == []
+    assert _partition_leaves([10], 4) == [[0]]
+    groups = _partition_leaves([100, 100, 100, 100], 2)
+    assert groups == [[0, 1], [2, 3]]
+    # contiguous cover, order preserved, never more than `shards`
+    sizes = [7, 1, 900, 30, 30, 500, 2]
+    groups = _partition_leaves(sizes, 3)
+    assert [i for g in groups for i in g] == list(range(len(sizes)))
+    assert 1 <= len(groups) <= 3
+    # zero-byte leaves still partition (weight fallback)
+    assert [i for g in _partition_leaves([0, 0, 0], 2) for i in g] == [0, 1, 2]
+
+
+def test_sharded_snapshot_matches_host_copy():
+    rng = np.random.default_rng(19)
+    tree = {"a": jnp.asarray(rng.standard_normal((64, 32)), jnp.float32),
+            "b": [jnp.asarray(rng.standard_normal(17), jnp.float32),
+                  np.float32(3.0)]}
+    want = host_copy(tree)
+    COPY_METER.reset()
+    ps = ShardedPendingSnapshot(tree, shards=3)
+    assert 1 <= ps.shards <= 3
+    got = ps.result()
+    assert got is ps.result()            # cached
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s = COPY_METER.stats()
+    nb = sum(np.asarray(l).nbytes for l in jax.tree.leaves(want))
+    assert s["d2h_bytes"] == nb
+    assert s["d2h_events"] == 1
+    assert s["d2h_overlap_ratio"] is not None
+    assert 0.0 <= s["d2h_overlap_ratio"] <= 1.0
+    ps.release()
+    COPY_METER.reset()
+
+
+def test_arena_sharded_permits():
+    arena = SnapshotArena(slots=2)
+    tree = {"w": jnp.ones((8, 8))}
+    a = arena.snapshot_sharded_async(tree, shards=2)
+    b = arena.snapshot_sharded_async(tree, shards=2)
+    assert arena.stats()["snapshots"] == 2 and arena.stats()["stalls"] == 0
+    a.release()
+    c = arena.snapshot_sharded_async(tree)
+    assert arena.stats()["stalls"] == 0       # slot was free
+    b.release()
+    c.release()
+
+
+def test_copy_meter_channels():
+    COPY_METER.reset()
+    COPY_METER.add_h2d(100)
+    COPY_METER.add_d2h(50, wait_s=0.25, span_s=1.0)
+    s = COPY_METER.stats()
+    assert s["h2d_bytes"] == 100 and s["h2d_events"] == 1
+    assert s["d2h_bytes"] == 50 and s["d2h_events"] == 1
+    assert s["d2h_overlap_ratio"] == pytest.approx(0.75)
+    COPY_METER.reset()
+    assert COPY_METER.d2h_overlap_ratio() is None
+    assert COPY_METER.stats()["h2d_bytes"] == 0

@@ -518,10 +518,13 @@ def test_replay_parallel_windowed_matches_unwindowed():
         np.int32(0))
     diffs = [(i + 1, {k: rng.standard_normal(v.shape).astype(np.float32)
                       for k, v in params.items()}) for i in range(7)]
-    p_one, o_one = rec.replay_parallel(params, opt, diffs, lr=1e-3)
+    p_one, o_one, n_one = rec.replay_parallel(params, opt, diffs, lr=1e-3)
     p_ser, o_ser = rec.replay_serial(params, opt, diffs, lr=1e-3)
+    assert n_one == len(diffs)
     for w in (1, 3, 7, 100):
-        p_w, o_w = rec.replay_parallel(params, opt, diffs, lr=1e-3, window=w)
+        p_w, o_w, n_w = rec.replay_parallel(params, opt, diffs, lr=1e-3,
+                                            window=w)
+        assert n_w == len(diffs)
         assert int(o_w.count) == int(o_one.count)
         for a, b in zip(jax.tree.leaves(p_one), jax.tree.leaves(p_w)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
