@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.patchset import PatchSet
+from repro.obs.trace import trace_span
 
 
 def split_sizes(extent: int, parts: int) -> List[int]:
@@ -184,10 +185,13 @@ class LocalFSBackend(StorageBackend):
         return None
 
     def put(self, key: str, obj: Any) -> int:
-        if self.fmt == "frame":
-            n = cio.save_frame(self._path(key), obj)
-        else:
-            n = cio.save(self._path(key), obj)
+        with trace_span("backend.put", "backend", tier=self.name,
+                        key=key) as sp:
+            if self.fmt == "frame":
+                n = cio.save_frame(self._path(key), obj)
+            else:
+                n = cio.save(self._path(key), obj)
+            sp.set(bytes=n)
         # a re-put after a format switch must not leave the key's
         # other-suffix file behind: a stale cross-format blob would
         # shadow (or survive delete alongside) the fresh write
@@ -372,6 +376,11 @@ class MemoryTierBackend(StorageBackend):
             self._buckets[c].move_to_end(key)
 
     def put(self, key: str, obj: Any) -> int:
+        with trace_span("backend.put", "backend", tier=self.name,
+                        key=key):
+            return self._put_impl(key, obj)
+
+    def _put_impl(self, key: str, obj: Any) -> int:
         struct, arrays = cio.pack(obj)
         # np.array COPIES: the tier must own its bytes — a caller
         # mutating its leaves after put() must not alter the checkpoint
@@ -760,7 +769,9 @@ class ShardedBackend(StorageBackend):
         with self._active_lock:
             self._active_puts.add(key)
         try:
-            return self._put(key, obj)
+            with trace_span("backend.put", "backend", tier=self.name,
+                            key=key, shards=self.num_shards):
+                return self._put(key, obj)
         finally:
             with self._active_lock:
                 self._active_puts.discard(key)

@@ -100,64 +100,102 @@ class CopyMeter:
       report replay bandwidth honestly.
     """
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._zero()
+    #: stats() keys, synced against the instrument set by
+    #: tests/test_observability.py (``d2h_overlap_ratio`` is derived)
+    KEYS = ("bytes", "events", "h2d_bytes", "h2d_events", "d2h_bytes",
+            "d2h_events", "d2h_wait_s", "d2h_span_s")
 
-    def _zero(self) -> None:
-        self.bytes = 0
-        self.events = 0
-        self.h2d_bytes = 0
-        self.h2d_events = 0
-        self.d2h_bytes = 0
-        self.d2h_events = 0
-        self.d2h_wait_s = 0.0
-        self.d2h_span_s = 0.0
+    def __init__(self):
+        from repro.obs.metrics import InstrumentSet
+        self._inst = InstrumentSet("copy_meter")
+        self._bytes = self._inst.counter("bytes")
+        self._events = self._inst.counter("events")
+        self._h2d_bytes = self._inst.counter("h2d_bytes")
+        self._h2d_events = self._inst.counter("h2d_events")
+        self._d2h_bytes = self._inst.counter("d2h_bytes")
+        self._d2h_events = self._inst.counter("d2h_events")
+        # histograms: the JSONL dump gets p50/p95/p99 of per-transfer
+        # wait/span; stats() keeps reading the sums under the old keys
+        self._d2h_wait = self._inst.histogram("d2h_wait_s")
+        self._d2h_span = self._inst.histogram("d2h_span_s")
+
+    # legacy attribute surface (tests and benchmarks read these raw)
+    @property
+    def bytes(self) -> int:
+        return int(self._bytes.value)
+
+    @property
+    def events(self) -> int:
+        return int(self._events.value)
+
+    @property
+    def h2d_bytes(self) -> int:
+        return int(self._h2d_bytes.value)
+
+    @property
+    def h2d_events(self) -> int:
+        return int(self._h2d_events.value)
+
+    @property
+    def d2h_bytes(self) -> int:
+        return int(self._d2h_bytes.value)
+
+    @property
+    def d2h_events(self) -> int:
+        return int(self._d2h_events.value)
+
+    @property
+    def d2h_wait_s(self) -> float:
+        return self._d2h_wait.sum
+
+    @property
+    def d2h_span_s(self) -> float:
+        return self._d2h_span.sum
 
     def add(self, nbytes: int) -> None:
-        with self._lock:
-            self.bytes += int(nbytes)
-            self.events += 1
+        self._bytes.add(int(nbytes))
+        self._events.add(1)
 
     def add_h2d(self, nbytes: int) -> None:
         """Replay-path host-to-device upload of checkpoint payloads."""
-        with self._lock:
-            self.h2d_bytes += int(nbytes)
-            self.h2d_events += 1
+        self._h2d_bytes.add(int(nbytes))
+        self._h2d_events.add(1)
 
     def add_d2h(self, nbytes: int, *, wait_s: float = 0.0,
                 span_s: float = 0.0) -> None:
         """Snapshot device-to-host transfer. ``wait_s``: time the
         consumer blocked; ``span_s``: issue-to-landed window."""
-        with self._lock:
-            self.d2h_bytes += int(nbytes)
-            self.d2h_events += 1
-            self.d2h_wait_s += float(wait_s)
-            self.d2h_span_s += float(span_s)
+        self._d2h_bytes.add(int(nbytes))
+        self._d2h_events.add(1)
+        self._d2h_wait.observe(float(wait_s))
+        self._d2h_span.observe(float(span_s))
 
     def d2h_overlap_ratio(self) -> Optional[float]:
         """Fraction of the D2H transfer window hidden behind compute
         (None until a metered transfer recorded its span)."""
-        with self._lock:
-            if self.d2h_span_s <= 0.0:
-                return None
-            return max(0.0, 1.0 - self.d2h_wait_s / self.d2h_span_s)
+        span = self._d2h_span.sum
+        if span <= 0.0:
+            return None
+        return max(0.0, 1.0 - self._d2h_wait.sum / span)
+
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
 
     def stats(self) -> Dict[str, Any]:
-        with self._lock:
-            out = {"bytes": self.bytes, "events": self.events,
-                   "h2d_bytes": self.h2d_bytes,
-                   "h2d_events": self.h2d_events,
-                   "d2h_bytes": self.d2h_bytes,
-                   "d2h_events": self.d2h_events,
-                   "d2h_wait_s": self.d2h_wait_s,
-                   "d2h_span_s": self.d2h_span_s}
+        out = {k: getattr(self, k) for k in self.KEYS}
         out["d2h_overlap_ratio"] = self.d2h_overlap_ratio()
         return out
 
     def reset(self) -> None:
-        with self._lock:
-            self._zero()
+        self._bytes.reset()
+        self._events.reset()
+        self._h2d_bytes.reset()
+        self._h2d_events.reset()
+        self._d2h_bytes.reset()
+        self._d2h_events.reset()
+        self._d2h_wait.reset()
+        self._d2h_span.reset()
 
 
 COPY_METER = CopyMeter()

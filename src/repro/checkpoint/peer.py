@@ -736,14 +736,28 @@ class PeerReplicaBackend(StorageBackend):
         self._inflight: set = set()
         self._acks: Dict[str, set] = {}
         self._rseq = 0
-        self.replicated = 0
-        self.acks_total = 0
-        self.replication_failures = 0
-        self.patch_misses = 0
-        self.peer_reads = 0
-        self.retries = 0
-        self.record_sends = 0
+        from repro.obs.metrics import InstrumentSet
+        self._inst = InstrumentSet("peer")
+        #: stats() counter keys, synced by tests/test_observability.py
+        self.KEYS = ("replicated", "acks_total", "replication_failures",
+                     "patch_misses", "peer_reads", "retries",
+                     "record_sends")
+        for k in self.KEYS:
+            self._inst.counter(k)
         self.last_error: Optional[str] = None
+
+    def __getattr__(self, name):
+        # legacy attribute surface: self.replicated etc. read counters
+        if name != "KEYS" and name in getattr(self, "KEYS", ()):
+            return int(self._inst.get(name).value)
+        raise AttributeError(name)
+
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
+
+    def _count(self, attr: str, n: int = 1):
+        self._inst.counter(attr).add(n)
 
     # -- provenance ----------------------------------------------------
     @property
@@ -773,7 +787,7 @@ class PeerReplicaBackend(StorageBackend):
                 last = e
                 if attempt < self.max_retries:
                     with self._lock:
-                        self.retries += 1
+                        self._count("retries")
                     time.sleep(delay)
                     delay = min(delay * 2, self.backoff_max_s)
         raise RetryExhaustedError(
@@ -785,13 +799,13 @@ class PeerReplicaBackend(StorageBackend):
         with self._lock:
             if kind == PUT and rk == ACK:
                 self._acks.setdefault(key, set()).add(peer_id)
-                self.acks_total += 1
+                self._count("acks_total")
             elif kind == PATCH and rk == MISS:
-                self.patch_misses += 1
+                self._count("patch_misses")
 
     def _note_failure(self, e: Exception) -> None:
         with self._lock:
-            self.replication_failures += 1
+            self._count("replication_failures")
             self.last_error = repr(e)
 
     def _replicate_one(self, peer_id: str, kind: bytes, key: str,
@@ -831,10 +845,13 @@ class PeerReplicaBackend(StorageBackend):
 
     def _replicate_fanout(self, peers: List[str], kind: bytes, key: str,
                           meta: dict, payload) -> None:
-        if callable(payload):         # deferred wire encoding (see put)
-            payload = payload()
-        for peer_id in peers:
-            self._replicate_one(peer_id, kind, key, meta, payload)
+        from repro.obs.trace import trace_span
+        with trace_span("peer.fanout", "peer", key=key,
+                        peers=len(peers)):
+            if callable(payload):     # deferred wire encoding (see put)
+                payload = payload()
+            for peer_id in peers:
+                self._replicate_one(peer_id, kind, key, meta, payload)
 
     def _replicate_async(self, kind: bytes, key: str, meta: dict,
                          payload,
@@ -880,7 +897,7 @@ class PeerReplicaBackend(StorageBackend):
                                   obj if self.transport.zero_copy
                                   else _once(lambda: cio.frame_dumps(obj)))
             with self._lock:
-                self.replicated += 1
+                self._count("replicated")
         return n
 
     def get(self, key: str) -> Any:
@@ -899,7 +916,7 @@ class PeerReplicaBackend(StorageBackend):
                 continue
             if rk == DATA:
                 with self._lock:
-                    self.peer_reads += 1
+                    self._count("peer_reads")
                 if not isinstance(rp, (bytes, bytearray, memoryview)):
                     return rp        # zero-copy object tree by reference
                 return cio.loads_any(rp)
@@ -977,7 +994,7 @@ class PeerReplicaBackend(StorageBackend):
         payload = json.dumps([rec]).encode("utf-8")
         self._replicate_async(MREC, "", {"src": self.src}, payload)
         with self._lock:
-            self.record_sends += 1
+            self._count("record_sends")
 
     def peer_catalog(self) -> Dict[str, dict]:
         """Union of every reachable peer's replica map (key -> meta)."""

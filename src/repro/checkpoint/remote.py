@@ -44,6 +44,7 @@ import numpy as np
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import StorageBackend
 from repro.checkpoint.patchset import PatchSet
+from repro.obs.trace import trace_span
 
 
 class TransientStoreError(Exception):
@@ -325,18 +326,27 @@ class RemoteObjectBackend(StorageBackend):
         #: keys with an upload in flight (chunks landing, index not yet
         #: committed): the maintenance orphan sweep must not reap them
         self._active_puts: set = set()
-        self.puts = 0
-        self.gets = 0
-        self.patches = 0
-        self.retries = 0
-        self.checksum_failures = 0
-        self.bytes_up = 0
-        self.bytes_down = 0
+        from repro.obs.metrics import InstrumentSet
+        self._inst = InstrumentSet("remote")
+        #: stats() counter keys, synced by tests/test_observability.py
+        self.KEYS = ("puts", "gets", "patches", "retries",
+                     "checksum_failures", "bytes_up", "bytes_down")
+        for k in self.KEYS:
+            self._inst.counter(k)
+
+    def __getattr__(self, name):
+        # legacy attribute surface: self.puts etc. read the counters
+        if name != "KEYS" and name in getattr(self, "KEYS", ()):
+            return int(self._inst.get(name).value)
+        raise AttributeError(name)
+
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
 
     # ------------------------------------------------------------------
     def _count(self, attr: str, n: int = 1):
-        with self._lock:
-            setattr(self, attr, getattr(self, attr) + n)
+        self._inst.counter(attr).add(n)
 
     def _with_retries(self, fn, desc: str):
         delay = self.backoff_s
@@ -379,7 +389,9 @@ class RemoteObjectBackend(StorageBackend):
         with self._lock:
             self._active_puts.add(key)
         try:
-            return self._put(key, obj)
+            with trace_span("backend.put", "backend", tier=self.name,
+                            key=key):
+                return self._put(key, obj)
         finally:
             with self._lock:
                 self._active_puts.discard(key)

@@ -45,9 +45,12 @@ segment, and every reader reconstructs the same merged manifest.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.obs.trace import trace_span
 
 from repro.checkpoint import io as cio
 from repro.checkpoint.backends import LocalFSBackend, StorageBackend
@@ -176,18 +179,59 @@ class CheckpointStore:
         #: attached background MaintenanceService (see
         #: repro.maintenance); None means synchronous fallbacks
         self.maintenance = None
-        self.bytes_written = 0
-        self.writes = 0
-        self.gc_deleted = 0
-        self.quarantined = 0
-        self.folds = 0
-        self.fold_bytes = 0
-        self.folded_patches = 0
+        from repro.obs.metrics import InstrumentSet
+        self._inst = InstrumentSet("store")
+        self._bytes_written = self._inst.counter("bytes_written")
+        self._writes = self._inst.counter("writes")
+        self._gc_deleted = self._inst.counter("gc_deleted")
+        self._quarantined = self._inst.counter("quarantined")
+        self._folds = self._inst.counter("folds")
+        self._fold_bytes = self._inst.counter("fold_bytes")
+        self._folded_patches = self._inst.counter("folded_patches")
         #: highest chain-read amplification observed (chain overlay
         #: bytes / base frame bytes) — the adaptive fold trigger's input
-        self.max_amplification = 0.0
+        self._max_amplification = self._inst.gauge("max_amplification")
+        #: per-save backend write latency (save_full/diff/batch/patch)
+        self._write_time = self._inst.histogram("write_time_s")
         self._prune_missing()
         self._update_protected()
+
+    # legacy attribute surface: tests and benchmarks read these raw
+    @property
+    def bytes_written(self) -> int:
+        return int(self._bytes_written.value)
+
+    @property
+    def writes(self) -> int:
+        return int(self._writes.value)
+
+    @property
+    def gc_deleted(self) -> int:
+        return int(self._gc_deleted.value)
+
+    @property
+    def quarantined_count(self) -> int:
+        return int(self._quarantined.value)
+
+    @property
+    def folds(self) -> int:
+        return int(self._folds.value)
+
+    @property
+    def fold_bytes(self) -> int:
+        return int(self._fold_bytes.value)
+
+    @property
+    def folded_patches(self) -> int:
+        return int(self._folded_patches.value)
+
+    @property
+    def max_amplification(self) -> float:
+        return float(self._max_amplification.value)
+
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
 
     # ------------------------------------------------------------------
     @property
@@ -206,8 +250,8 @@ class CheckpointStore:
                                                  "local")))
         with self._lock:
             self.journal.append("add", kind, entry=entry)
-            self.bytes_written += nbytes
-            self.writes += 1
+        self._bytes_written.add(nbytes)
+        self._writes.add(1)
 
     # ------------------------------------------------------------------
     def save_full(self, step: int, state, *, record_names: bool = False)\
@@ -216,7 +260,11 @@ class CheckpointStore:
         # pre-protect: eviction runs inside put(), before the journal
         # records the entry — the incoming blob must already be exempt
         self._update_protected(extra={key})
-        n = self.backend.put(key, state)
+        with trace_span("store.save_full", "store", key=key) as sp:
+            t0 = time.perf_counter()
+            n = self.backend.put(key, state)
+            self._write_time.observe(time.perf_counter() - t0)
+            sp.set(bytes=n)
         entry = {"step": step, "key": key,
                  "path": self.backend.url(key), "bytes": n}
         if record_names:
@@ -246,8 +294,12 @@ class CheckpointStore:
                 "--format frame or --persist-mode full")
         key = f"patch_{step:08d}"
         self._update_protected(extra={key})
-        n = self.backend.put(key, {"base": base_key, "step": step,
-                                   "updates": updates})
+        with trace_span("store.save_patch", "store", key=key) as sp:
+            t0 = time.perf_counter()
+            n = self.backend.put(key, {"base": base_key, "step": step,
+                                       "updates": updates})
+            self._write_time.observe(time.perf_counter() - t0)
+            sp.set(bytes=n)
         entry = {"step": step, "key": key, "base": base_key,
                  "path": self.backend.url(key), "bytes": n}
         extents = {path: leaf.extents()
@@ -258,8 +310,8 @@ class CheckpointStore:
         self._record("patches", entry, n)
         self._update_protected()
         with self._lock:
-            self.max_amplification = max(self.max_amplification,
-                                         self.chain_amplification())
+            self._max_amplification.set(
+                max(self.max_amplification, self.chain_amplification()))
         return key
 
     def chain_amplification(self, base_key: Optional[str] = None) -> float:
@@ -290,7 +342,11 @@ class CheckpointStore:
     def save_diff(self, step: int, payload) -> str:
         key = f"diff_{step:08d}"
         self._update_protected(extra={key})
-        n = self.backend.put(key, payload)
+        with trace_span("store.save_diff", "store", key=key) as sp:
+            t0 = time.perf_counter()
+            n = self.backend.put(key, payload)
+            self._write_time.observe(time.perf_counter() - t0)
+            sp.set(bytes=n)
         self._record("diffs", {"step": step, "key": key,
                                "path": self.backend.url(key), "bytes": n}, n)
         self._update_protected()
@@ -301,8 +357,13 @@ class CheckpointStore:
         """One I/O operation carrying differentials [first..last]."""
         key = f"batch_{first:08d}_{last:08d}"
         self._update_protected(extra={key})
-        n = self.backend.put(key, {"mode": mode, "first": first,
-                                   "last": last, "payloads": payloads})
+        with trace_span("store.save_batch", "store", key=key,
+                        n=len(payloads)) as sp:
+            t0 = time.perf_counter()
+            n = self.backend.put(key, {"mode": mode, "first": first,
+                                       "last": last, "payloads": payloads})
+            self._write_time.observe(time.perf_counter() - t0)
+            sp.set(bytes=n)
         self._record("batches", {"first": first, "last": last, "key": key,
                                  "path": self.backend.url(key),
                                  "bytes": n}, n)
@@ -589,9 +650,11 @@ class CheckpointStore:
         """Sweep phase, one bounded slice: pwrite these leaves into the
         base frame in place. Blob I/O only — never under the manifest
         lock."""
-        n = self.backend.patch(base_key, updates)
-        with self._lock:
-            self.fold_bytes += n
+        with trace_span("store.fold_slice", "maintenance",
+                        key=base_key) as sp:
+            n = self.backend.patch(base_key, updates)
+            sp.set(bytes=n)
+        self._fold_bytes.add(n)
         return n
 
     def fold_commit(self, base_key: str, patch_keys: List[str],
@@ -618,9 +681,8 @@ class CheckpointStore:
             with self._lock:
                 self.journal.append("del", "patches", key=key)
             self.backend.delete(key)
-        with self._lock:
-            self.folds += 1
-            self.folded_patches += len(patch_keys)
+        self._folds.add(1)
+        self._folded_patches.add(len(patch_keys))
         self._update_protected()
 
     def fold_sync(self, merge_slice: Optional[int] = None) -> int:
@@ -741,8 +803,7 @@ class CheckpointStore:
                 crash_hook("gc:mid_delete", key)
             self.backend.delete(key)
             removed[kind] = removed.get(kind, 0) + 1
-            with self._lock:
-                self.gc_deleted += 1
+            self._gc_deleted.add(1)
         self._update_protected()
         return removed
 
@@ -801,7 +862,7 @@ class CheckpointStore:
             q = dict(entry)
             q.update({"key": key, "src_kind": kind, "reason": reason})
             self.journal.append("add", "quarantined", entry=q)
-            self.quarantined += 1
+        self._quarantined.add(1)
         self._update_protected()
         return True
 

@@ -75,6 +75,10 @@ class OnlineTuner:
     def __init__(self, params: SystemParams, ema: float = 0.3):
         self.p = dataclasses.replace(params)
         self.ema = ema
+        #: EMA of the step-path stall fraction (0..1) observed by the
+        #: StepTimeline — 0.0 keeps Eq. (10) untouched, so runs without
+        #: the observability pipeline behave exactly as before
+        self.stall_fraction = 0.0
 
     def _fold(self, attr: str, value: float):
         old = getattr(self.p, attr)
@@ -92,5 +96,22 @@ class OnlineTuner:
     def observe_full_size(self, s: float):
         self._fold("S", s)
 
+    def observe_stall_fraction(self, frac: float):
+        """Fold in the timeline's attributed stall share of step wall.
+        Unlike raw wall-clock (which conflates checkpoint cost with
+        compute jitter), this is exactly the fraction of step time the
+        persistence pipeline *caused*, so it modulates the effective
+        write bandwidth Eq. (10) sees: a pipeline stalling the step
+        loop looks slower than its raw device-to-storage rate."""
+        frac = min(max(float(frac), 0.0), 1.0)
+        self.stall_fraction = ((1 - self.ema) * self.stall_fraction
+                               + self.ema * frac)
+
     def current(self) -> Tuple[int, int]:
-        return practical_config(self.p)
+        if self.stall_fraction <= 0.0:
+            return practical_config(self.p)
+        # penalize W by the observed stall share (bounded at 2x so a
+        # pathological window cannot collapse the checkpoint frequency)
+        eff = dataclasses.replace(
+            self.p, W=self.p.W / (1.0 + min(self.stall_fraction, 1.0)))
+        return practical_config(eff)

@@ -47,6 +47,9 @@ FLAG_MAP: Dict[str, tuple] = {
     "gc_slice": ("engine", "gc_slice"),
     "merge_slice": ("engine", "merge_slice"),
     "scrub_interval": ("engine", "scrub_interval"),
+    "trace_out": ("engine", "trace_out"),
+    "metrics_out": ("engine", "metrics_out"),
+    "trace_buffer": ("engine", "trace_buffer"),
     "ckpt_dir": ("store", "root"),
     "format": ("store", "fmt"),
     "retention": ("store", "retention_fulls"),
@@ -68,7 +71,8 @@ FLAG_MAP: Dict[str, tuple] = {
 
 #: parser dests that are runtime inputs, not engine/store config
 RUNTIME_FLAGS = frozenset({"arch", "reduced", "steps", "batch", "seq",
-                           "seed", "log_every", "fail_at", "clean"})
+                           "seed", "log_every", "fail_at", "clean",
+                           "log_level"})
 
 
 @dataclasses.dataclass
@@ -94,6 +98,9 @@ class EngineConfig:
     gc_slice: int = 64
     merge_slice: int = 64
     scrub_interval: float = 0.0
+    trace_out: Optional[str] = None   #: Chrome trace_event JSON path
+    metrics_out: Optional[str] = None  #: step/metric JSONL path
+    trace_buffer: int = 65536          #: span ring-buffer capacity
     store: Optional[StoreConfig] = None
 
     # ------------------------------------------------------------------

@@ -33,6 +33,16 @@ from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
                                       wait_drained)
 from repro.core.snapshot import SnapshotArena, host_copy  # noqa: F401
 from repro.core.steps import make_train_step
+from repro.obs.timeline import TIMELINE
+from repro.obs.trace import trace_span
+
+
+def _payload_nbytes(payloads) -> int:
+    """Host bytes of a batch of compressed differentials (what the
+    batched write actually moves — the tuner history's bytes input)."""
+    import jax
+    return int(sum(getattr(leaf, "nbytes", 0) or 0
+                   for p in payloads for leaf in jax.tree.leaves(p)))
 
 
 class LowDiff:
@@ -123,7 +133,8 @@ class LowDiff:
 
     def _handle(self, step: int, cg):
         """Step ①: offload to CPU memory (frees the device buffer)."""
-        host_cg = host_copy(cg)
+        with trace_span("ckpt.offload", "persist", step=step):
+            host_cg = host_copy(cg)
         del cg
         with self._buffer_lock:
             self._buffer.append((step, host_cg))
@@ -139,18 +150,29 @@ class LowDiff:
                 return
             buf, self._buffer = self._buffer, []
         t0 = time.perf_counter()
-        self.store.save_batch(buf[0][0], buf[-1][0],
-                              [p for _, p in buf], mode=self.batch_mode)
-        self.tuner.observe_merge_time(
-            (time.perf_counter() - t0) / max(len(buf), 1))
-        self._apply_tuning()
+        with trace_span("persist.batch", "persist", n=len(buf),
+                        first=buf[0][0], last=buf[-1][0]):
+            self.store.save_batch(buf[0][0], buf[-1][0],
+                                  [p for _, p in buf], mode=self.batch_mode)
+        merge_t = (time.perf_counter() - t0) / max(len(buf), 1)
+        self.tuner.observe_merge_time(merge_t)
+        batch_bytes = _payload_nbytes([p for _, p in buf])
+        self._apply_tuning(merge_time_s=merge_t, batch_bytes=batch_bytes)
 
-    def _apply_tuning(self):
+    def _apply_tuning(self, **inputs):
         """Close the paper's §VII adaptation loop: re-solve Eq. (10)
         with the tuner's updated constants after each batch write and
         apply the new (f, b) to the dimensions the caller left on auto.
         Explicitly pinned dimensions are still recorded, so stats()
-        shows what the tuner *would* choose."""
+        shows what the tuner *would* choose.
+
+        Each history entry carries the *inputs* the decision saw
+        (observed stall fraction, merge time, batch bytes) so
+        ``stats()["tuning"]`` is auditable — a (f, b) move can be
+        traced back to the measurement that caused it. Entries ride
+        the same bounded deque as before."""
+        stall = TIMELINE.stall_fraction()
+        self.tuner.observe_stall_fraction(stall)
         interval, b = self.tuner.current()
         applied = False
         if self._auto_full_interval and interval != self.full_interval:
@@ -164,7 +186,10 @@ class LowDiff:
         self.tuning_resolves += 1
         self._tuning_history.append(
             {"step": self._step_counter, "full_interval": interval,
-             "batch_size": b, "applied": applied})
+             "batch_size": b, "applied": applied,
+             "stall_fraction": round(self.tuner.stall_fraction, 6),
+             **{k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in inputs.items()}})
 
     # ------------------------------------------------------------------
     # training process hooks
@@ -177,7 +202,8 @@ class LowDiff:
         self._step_counter += 1
         step = self._step_counter   # host-side: never forces the device
         self._start_consumer()
-        self.queue.put(step, cg)          # zero-copy hand-off
+        blocked = self.queue.put(step, cg)    # zero-copy hand-off
+        TIMELINE.charge("queue_backpressure", blocked)
         if step % self.full_interval == 0:
             # async snapshot: only enqueue the D2H transfers here — the
             # wait for the bytes (and the write) happens on the persist
@@ -197,7 +223,8 @@ class LowDiff:
 
     def _persist_full(self, step: int, pending):
         try:
-            self.store.save_full(step, pending.result())
+            with trace_span("persist.full", "persist", step=step):
+                self.store.save_full(step, pending.result())
         finally:
             pending.release()
 
@@ -213,12 +240,17 @@ class LowDiff:
         maintenance drain — shares the same deadline budget."""
         t = timeout if timeout is not None else self.flush_timeout
         deadline = time.monotonic() + t
-        wait_drained(self.queue, lambda: self._processed, self._consumer, t)
-        self._flush_batch()
-        for f in self._pending:
-            f.result()
-        self._pending.clear()
-        self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
+        t0 = time.perf_counter()
+        with trace_span("ckpt.flush", "persist"):
+            wait_drained(self.queue, lambda: self._processed,
+                         self._consumer, t)
+            self._flush_batch()
+            for f in self._pending:
+                f.result()
+            self._pending.clear()
+            self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
+        TIMELINE.event("flush_stall", time.perf_counter() - t0,
+                       step=self._step_counter)
 
     def close(self):
         try:
@@ -238,23 +270,32 @@ class LowDiff:
         """Returns (state, replayed_steps). Raises if no checkpoint.
         Works against any storage backend — the chain loader delegates
         shard re-assembly / tier lookup to the store's backend."""
-        state, diffs = rec.load_latest_chain(self.store)
+        t_rec = time.perf_counter()
+        with trace_span("recovery.load_chain", "recovery"):
+            state, diffs = rec.load_latest_chain(self.store)
         # LowDiff writes one differential per iteration: cut the chain
         # at the first step gap (a write-back hole) rather than replay
         # across it into silently wrong state
         diffs = rec.contiguous_prefix(int(state["step"]), diffs)
-        if self.replay_device:
-            params, opt, applied = rec.replay_device(
-                state["params"], state["opt"], diffs, lr=self.lr,
-                window=self.replay_window)
-        elif self.parallel_recovery:
-            params, opt, applied = rec.replay_parallel(
-                state["params"], state["opt"], diffs, lr=self.lr,
-                window=self.replay_window)
-        else:
-            params, opt = rec.replay_serial(state["params"], state["opt"],
-                                            diffs, lr=self.lr)
-            applied = len(diffs)
+        with trace_span("recovery.replay", "recovery", n=len(diffs),
+                        mode=("device" if self.replay_device else
+                              "parallel" if self.parallel_recovery
+                              else "serial")):
+            if self.replay_device:
+                params, opt, applied = rec.replay_device(
+                    state["params"], state["opt"], diffs, lr=self.lr,
+                    window=self.replay_window)
+            elif self.parallel_recovery:
+                params, opt, applied = rec.replay_parallel(
+                    state["params"], state["opt"], diffs, lr=self.lr,
+                    window=self.replay_window)
+            else:
+                params, opt = rec.replay_serial(state["params"],
+                                                state["opt"],
+                                                diffs, lr=self.lr)
+                applied = len(diffs)
+        TIMELINE.event("recovery", time.perf_counter() - t_rec,
+                       step=self._step_counter)
         state["params"], state["opt"] = params, opt
         if applied:
             # a payload that failed to decode cut the chain early; the
@@ -282,4 +323,5 @@ class LowDiff:
                            "history": list(self._tuning_history),
                            "params": dataclasses.asdict(self.tuner.p)},
                 "train_loop_ckpt_time": self.ckpt_time,
-                "full_saves": self.full_saves}
+                "full_saves": self.full_saves,
+                "timeline": TIMELINE.stats()}

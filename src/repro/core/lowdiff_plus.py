@@ -48,6 +48,8 @@ from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
                                       wait_drained)
 from repro.core.snapshot import host_copy, start_host_transfer
 from repro.core.steps import make_train_step
+from repro.obs.timeline import TIMELINE
+from repro.obs.trace import trace_span
 
 
 class _NumpyAdam:
@@ -396,13 +398,16 @@ class LowDiffPlus:
         start_host_transfer(flat)
         futures = {k: self._snap_pool.submit(np.asarray, v)
                    for k, v in flat.items()}
-        self.queue.put(step, futures)
+        blocked = self.queue.put(step, futures)
+        TIMELINE.charge("queue_backpressure", blocked)
         self.ckpt_time += time.perf_counter() - t0
         return state, metrics
 
     def _handle(self, step: int, futures):
-        grads = {k: f.result() for k, f in futures.items()}
-        with self._replica_lock:
+        with trace_span("ckpt.offload", "persist", step=step):
+            grads = {k: f.result() for k, f in futures.items()}
+        with self._replica_lock, \
+                trace_span("replica.apply", "persist", step=step):
             self._replica.apply(grads)        # in-memory checkpoint update
             self._replica_step = step
         if step % self.persist_interval == 0:
@@ -430,6 +435,10 @@ class LowDiffPlus:
 
     def _persist(self, step: int, snap):
         kind, base_step, payload = snap
+        with trace_span(f"persist.{kind}", "persist", step=step):
+            return self._persist_impl(step, kind, base_step, payload)
+
+    def _persist_impl(self, step: int, kind, base_step, payload):
         if kind == "full":
             self.store.save_full(
                 step, payload,
@@ -465,17 +474,23 @@ class LowDiffPlus:
         deadline-bounded."""
         t = timeout if timeout is not None else self.flush_timeout
         deadline = time.monotonic() + t
-        wait_drained(self.queue, lambda: self._processed, self._consumer, t)
-        with self._pending_lock:
-            pending = list(self._pending)
-        for f in pending:
-            f.result()                  # a failure keeps the rest pending
-        with self._pending_lock:
-            # _handle only ever appends, so the futures just waited on
-            # are exactly the list's prefix: drain it by index — O(n)
-            # total — instead of the old O(n²) membership re-scan
-            del self._pending[:len(pending)]
-        self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
+        t0 = time.perf_counter()
+        with trace_span("ckpt.flush", "persist"):
+            wait_drained(self.queue, lambda: self._processed,
+                         self._consumer, t)
+            with self._pending_lock:
+                pending = list(self._pending)
+            for f in pending:
+                f.result()              # a failure keeps the rest pending
+            with self._pending_lock:
+                # _handle only ever appends, so the futures just waited
+                # on are exactly the list's prefix: drain it by index —
+                # O(n) total — instead of the old O(n²) membership
+                # re-scan
+                del self._pending[:len(pending)]
+            self.store.flush(timeout=max(0.0, deadline - time.monotonic()))
+        TIMELINE.event("flush_stall", time.perf_counter() - t0,
+                       step=self._step_counter)
 
     def close(self):
         try:
@@ -493,8 +508,12 @@ class LowDiffPlus:
     def recover_software(self, template_state):
         """Software failure: training process dies, checkpointing process
         (and its CPU replica) survives — restore from memory."""
-        with self._replica_lock:
+        t_rec = time.perf_counter()
+        with self._replica_lock, \
+                trace_span("recovery.software", "recovery"):
             rep = self._replica.state()
+        TIMELINE.event("recovery", time.perf_counter() - t_rec,
+                       step=self._step_counter)
         dtypes = {k: np.asarray(v).dtype
                   for k, v in _flatten(template_state["params"]).items()}
         params = _unflatten_like(
@@ -513,10 +532,14 @@ class LowDiffPlus:
         latest full overlaid with its committed patch chain when
         persisting incrementally (one frame read once the background
         fold has consolidated it)."""
+        t_rec = time.perf_counter()
         try:
-            blob, step = self.store.load_latest_state()
+            with trace_span("recovery.hardware", "recovery"):
+                blob, step = self.store.load_latest_state()
         except FileNotFoundError:
             raise FileNotFoundError("no persisted checkpoint")
+        TIMELINE.event("recovery", time.perf_counter() - t_rec,
+                       step=self._step_counter)
         dtypes = {k: np.asarray(v).dtype
                   for k, v in _flatten(template_state["params"]).items()}
         params = _unflatten_like(
@@ -544,4 +567,5 @@ class LowDiffPlus:
                 "adaptive_folds": self.adaptive_folds,
                 "apply_leaves_skipped": (self._replica.skipped_applies
                                          if self._replica is not None
-                                         else 0)}
+                                         else 0),
+                "timeline": TIMELINE.stats()}

@@ -317,28 +317,31 @@ def _stage_window(diffs: List[Tuple[int, Any]]):
     (``contiguous_prefix`` semantics). Returns
     ``(stacked | None, n_staged, error | None)``."""
     from repro.checkpoint.io import COPY_METER
-    staged, err, template = [], None, None
-    nbytes = 0
-    for _, payload in diffs:
-        try:
-            _check_wire(payload)
-            dev = jax.tree.map(jnp.asarray, payload)
-            tdef = jax.tree.structure(dev)
-            if template is None:
-                template = tdef
-            elif tdef != template:
-                raise ValueError("differential structure changed "
-                                 "mid-window")
-            nbytes += sum(l.nbytes for l in jax.tree.leaves(dev))
-            staged.append(dev)
-        except Exception as e:
-            err = e
-            break
-    if not staged:
-        return None, 0, err
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *staged)
-    COPY_METER.add_h2d(nbytes)
-    return stacked, len(staged), err
+    from repro.obs.trace import trace_span
+    with trace_span("replay.h2d", "recovery", n=len(diffs)) as sp:
+        staged, err, template = [], None, None
+        nbytes = 0
+        for _, payload in diffs:
+            try:
+                _check_wire(payload)
+                dev = jax.tree.map(jnp.asarray, payload)
+                tdef = jax.tree.structure(dev)
+                if template is None:
+                    template = tdef
+                elif tdef != template:
+                    raise ValueError("differential structure changed "
+                                     "mid-window")
+                nbytes += sum(l.nbytes for l in jax.tree.leaves(dev))
+                staged.append(dev)
+            except Exception as e:
+                err = e
+                break
+        if not staged:
+            return None, 0, err
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *staged)
+        COPY_METER.add_h2d(nbytes)
+        sp.set(bytes=nbytes, staged=len(staged))
+        return stacked, len(staged), err
 
 
 def replay_device(params, opt: AdamState, diffs: List[Tuple[int, Any]], *,

@@ -34,26 +34,55 @@ class CheckpointingError(RuntimeError):
 
 
 class ReusingQueue:
+    #: stats() keys, synced against the instrument set by
+    #: tests/test_observability.py (``consumer_error`` is derived)
+    KEYS = ("enqueued", "dequeued", "put_block_time", "max_depth")
+
     def __init__(self, maxsize: int = 4):
+        from repro.obs.metrics import InstrumentSet
         self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
-        self.enqueued = 0
-        self.dequeued = 0
-        self.put_block_time = 0.0     # training stalls caused by backpressure
-        self.max_depth = 0
+        self._inst = InstrumentSet("queue")
+        self._enqueued = self._inst.counter("enqueued")
+        self._dequeued = self._inst.counter("dequeued")
+        # per-put block time histogram: the registry dump gets the
+        # backpressure distribution, stats() keeps the legacy sum key
+        self._put_block = self._inst.histogram("put_block_time")
+        self._max_depth = self._inst.gauge("max_depth")
         self._lock = threading.Lock()
         self._closed = threading.Event()
         #: the exception that killed the consumer's handler, if any
         self.error: Optional[BaseException] = None
 
-    def put(self, step: int, payload: Any):
-        """Called from the training loop. Blocks only on backpressure."""
+    # legacy attribute surface (wait_drained and tests read these raw)
+    @property
+    def enqueued(self) -> int:
+        return int(self._enqueued.value)
+
+    @property
+    def dequeued(self) -> int:
+        return int(self._dequeued.value)
+
+    @property
+    def put_block_time(self) -> float:
+        return self._put_block.sum
+
+    @property
+    def max_depth(self) -> int:
+        return int(self._max_depth.value)
+
+    def put(self, step: int, payload: Any) -> float:
+        """Called from the training loop. Blocks only on backpressure.
+        Returns the seconds this call blocked so the producer can
+        charge the step's stall attribution."""
         t0 = time.perf_counter()
         self._q.put((step, payload))
         dt = time.perf_counter() - t0
+        self._enqueued.add(1)
+        self._put_block.observe(dt)
         with self._lock:
-            self.enqueued += 1
-            self.put_block_time += dt
-            self.max_depth = max(self.max_depth, self._q.qsize())
+            if self._q.qsize() > self._max_depth.value:
+                self._max_depth.set(self._q.qsize())
+        return dt
 
     def get(self, timeout: Optional[float] = None):
         """Called from the checkpointing thread. Returns (step, payload).
@@ -61,8 +90,7 @@ class ReusingQueue:
         ``dequeued``."""
         item = self._q.get(timeout=timeout)
         if item[0] is not None:
-            with self._lock:
-                self.dequeued += 1
+            self._dequeued.add(1)
         return item
 
     def close(self):
@@ -102,10 +130,12 @@ class ReusingQueue:
                 self.error = e
                 return
 
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
+
     def stats(self):
-        return {"enqueued": self.enqueued, "dequeued": self.dequeued,
-                "put_block_time": self.put_block_time,
-                "max_depth": self.max_depth,
+        return {**{k: getattr(self, k) for k in self.KEYS},
                 "consumer_error": repr(self.error) if self.error else None}
 
 

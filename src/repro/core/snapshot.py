@@ -166,7 +166,9 @@ class ShardedPendingSnapshot:
         return len(self._groups)
 
     def result(self):
-        with self._lock:
+        from repro.obs.trace import trace_span
+        with self._lock, trace_span("snapshot.d2h", "snapshot",
+                                    shards=len(self._groups)) as sp:
             if self._done:
                 return self._host
             host: List[Any] = list(self._leaves)
@@ -185,6 +187,7 @@ class ShardedPendingSnapshot:
             span = time.perf_counter() - self._issued_at
             COPY_METER.add(nbytes)             # the one metered host copy
             COPY_METER.add_d2h(nbytes, wait_s=wait, span_s=span)
+            sp.set(bytes=nbytes, wait_ms=round(wait * 1e3, 3))
             self._host = jax.tree.unflatten(self._treedef, host)
             self._leaves = []
             self._done = True
@@ -218,22 +221,46 @@ class SnapshotArena:
     D2H overlaps the still-running step and buffers release early.
     """
 
+    #: stats() keys, synced against the instrument set by
+    #: tests/test_observability.py (``slots`` is config, not a metric)
+    KEYS = ("snapshots", "stalls")
+
     def __init__(self, slots: int = 2):
+        from repro.obs.metrics import InstrumentSet
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.slots = slots
         self._sem = threading.Semaphore(slots)
-        self._lock = threading.Lock()
-        self.snapshots = 0
-        self.stalls = 0
+        self._inst = InstrumentSet("snapshot_arena")
+        self._snapshots = self._inst.counter("snapshots")
+        self._stalls = self._inst.counter("stalls")
+        self._stall_time = self._inst.histogram("stall_time_s")
 
-    def _acquire(self) -> None:
+    # legacy attribute surface
+    @property
+    def snapshots(self) -> int:
+        return int(self._snapshots.value)
+
+    @property
+    def stalls(self) -> int:
+        return int(self._stalls.value)
+
+    def _acquire(self) -> float:
+        """Acquire a permit; returns the seconds the caller blocked so
+        the producer can charge snapshot-stall attribution."""
+        stalled = 0.0
         if not self._sem.acquire(blocking=False):
-            with self._lock:
-                self.stalls += 1
-            self._sem.acquire()
-        with self._lock:
-            self.snapshots += 1
+            from repro.obs.timeline import TIMELINE
+            from repro.obs.trace import trace_span
+            self._stalls.add(1)
+            t0 = time.perf_counter()
+            with trace_span("snapshot.permit_wait", "snapshot"):
+                self._sem.acquire()
+            stalled = time.perf_counter() - t0
+            self._stall_time.observe(stalled)
+            TIMELINE.charge("snapshot_stall", stalled)
+        self._snapshots.add(1)
+        return stalled
 
     def snapshot_async(self, tree) -> PendingSnapshot:
         self._acquire()
@@ -247,7 +274,10 @@ class SnapshotArena:
     def _release(self) -> None:
         self._sem.release()
 
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
+
     def stats(self) -> Dict[str, int]:
-        with self._lock:
-            return {"slots": self.slots, "snapshots": self.snapshots,
-                    "stalls": self.stalls}
+        return {"slots": self.slots, "snapshots": self.snapshots,
+                "stalls": self.stalls}

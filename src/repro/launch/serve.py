@@ -21,6 +21,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import make_batch
 from repro.models.registry import build_model
+from repro.obs.log import configure as configure_logging, get_logger
+
+log = get_logger("serve")
 
 
 def load_params(model, ckpt_dir):
@@ -36,11 +39,12 @@ def load_params(model, ckpt_dir):
     finally:
         store.close()
     params = state.get("params", state) if isinstance(state, dict) else state
-    print(f"loaded checkpoint step {step} from {ckpt_dir}")
+    log.info(f"loaded checkpoint step {step} from {ckpt_dir}")
     return jax.tree.map(jnp.asarray, params)
 
 
 def run(args):
+    configure_logging(getattr(args, "log_level", "info"))
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -49,8 +53,8 @@ def run(args):
     if getattr(args, "ckpt_dir", None):
         params = load_params(model, args.ckpt_dir)
         if params is None:
-            print(f"no loadable checkpoint in {args.ckpt_dir}; "
-                  f"using random init")
+            log.info(f"no loadable checkpoint in {args.ckpt_dir}; "
+                     f"using random init")
     if params is None:
         params = model.init(jax.random.PRNGKey(0))
     total = args.prompt_len + args.gen
@@ -74,12 +78,12 @@ def run(args):
     jax.block_until_ready(logits)
     dt = time.perf_counter() - t0
     n_generated = len(out_tokens) * args.batch
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prompt={args.prompt_len} generated={len(out_tokens)}/req")
-    print(f"{n_generated} tokens in {dt:.2f}s -> "
-          f"{n_generated / dt:.1f} tok/s (batch-aggregate)")
-    print("sample continuation (req 0):",
-          [int(t[0]) for t in out_tokens[:10]])
+    log.info(f"arch={cfg.name} batch={args.batch} "
+             f"prompt={args.prompt_len} generated={len(out_tokens)}/req")
+    log.info(f"{n_generated} tokens in {dt:.2f}s -> "
+             f"{n_generated / dt:.1f} tok/s (batch-aggregate)")
+    log.info(f"sample continuation (req 0): "
+             f"{[int(t[0]) for t in out_tokens[:10]]}")
     return out_tokens
 
 
@@ -93,6 +97,8 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="load the newest persisted params from this "
                          "checkpoint store (random init when absent)")
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"))
     run(ap.parse_args())
 
 

@@ -35,6 +35,10 @@ from repro.core.engine import STRATEGIES, EngineConfig, make_engine
 from repro.core.steps import init_state, make_train_step
 from repro.data.synthetic import TokenStream
 from repro.models.registry import build_model
+from repro.obs.log import configure as configure_logging, get_logger
+from repro.obs.metrics import REGISTRY
+from repro.obs.timeline import STALL_CATEGORIES, TIMELINE
+from repro.obs.trace import TRACER
 
 
 def build_strategy(name: str, model, store, *, lr, rho, full_interval,
@@ -57,16 +61,32 @@ def build_strategy(name: str, model, store, *, lr, rho, full_interval,
     return make_engine(cfg, model, store=store)
 
 
+def _stall_suffix(rec) -> str:
+    """Render a committed step record's stall attribution (only the
+    categories that actually charged time — quiet steps stay short)."""
+    parts = []
+    for cat in STALL_CATEGORIES:
+        if rec.get(cat, 0.0) > 0.0:
+            parts.append(f"{cat}={rec[cat] * 1e3:.1f}ms")
+    parts.append(f"stall%={TIMELINE.stall_fraction() * 100:.1f}")
+    return " ".join(parts)
+
+
 def run(args):
+    configure_logging(getattr(args, "log_level", "info"))
+    log = get_logger("train")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    print(f"arch={cfg.name} params={model.n_params() / 1e6:.1f}M "
-          f"strategy={args.strategy}")
+    log.info(f"arch={cfg.name} params={model.n_params() / 1e6:.1f}M "
+             f"strategy={args.strategy}")
     if getattr(args, "clean", False) and args.ckpt_dir:
         shutil.rmtree(args.ckpt_dir, ignore_errors=True)
     engine_cfg = EngineConfig.from_args(args)
+    TIMELINE.clear()
+    if engine_cfg.trace_out:
+        TRACER.enable(engine_cfg.trace_buffer)
     store = engine_cfg.build_store()
     strat = make_engine(engine_cfg, model, store=store)
     mode = ("lowdiff" if args.strategy == "lowdiff" else
@@ -80,25 +100,29 @@ def run(args):
     for t in range(args.steps):
         batch = next(stream)
         t0 = time.perf_counter()
+        TIMELINE.begin(t + 1)
         if strat is not None:
             state, metrics = strat.train_step(state, batch)
         else:
             state, metrics, _ = plain_step(state, batch)
         jax.block_until_ready(state["params"])
-        times.append(time.perf_counter() - t0)
+        step_wall = time.perf_counter() - t0
+        rec = TIMELINE.commit(t + 1, step_wall)
+        times.append(step_wall)
         losses.append(float(metrics["loss"]))
         if args.log_every and (t + 1) % args.log_every == 0:
-            print(f"step {t + 1:5d} loss={losses[-1]:.4f} "
-                  f"it={np.mean(times[-args.log_every:]) * 1e3:.1f}ms")
+            log.info(f"step {t + 1:5d} loss={losses[-1]:.4f} "
+                     f"it={np.mean(times[-args.log_every:]) * 1e3:.1f}ms "
+                     + _stall_suffix(rec))
         if args.fail_at and t + 1 == args.fail_at:
-            print(f"\n*** injected failure at step {t + 1} ***")
+            log.info(f"\n*** injected failure at step {t + 1} ***")
             assert strat is not None, "--fail-at needs a strategy"
             strat.flush()
             if args.strategy == "lowdiff_plus":
                 state = strat.recover_software(state)
             else:
                 state, n = strat.recover()
-            print(f"recovered at step {int(state['step'])}; resuming\n")
+            log.info(f"recovered at step {int(state['step'])}; resuming\n")
             stream.step = int(state["step"])
 
     wall = time.perf_counter() - t_start
@@ -106,12 +130,19 @@ def run(args):
         strat.close()
     elif store is not None:
         store.close()
-    print(f"\n{args.steps} steps in {wall:.1f}s "
-          f"(mean iter {np.mean(times) * 1e3:.1f}ms, "
-          f"p50 {np.percentile(times, 50) * 1e3:.1f}ms)")
-    print(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    log.info(f"\n{args.steps} steps in {wall:.1f}s "
+             f"(mean iter {np.mean(times) * 1e3:.1f}ms, "
+             f"p50 {np.percentile(times, 50) * 1e3:.1f}ms)")
+    log.info(f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
     if strat is not None:
-        print("strategy stats:", strat.stats())
+        log.info(f"strategy stats: {strat.stats()}")
+    if engine_cfg.trace_out:
+        n = TRACER.export_chrome(engine_cfg.trace_out)
+        log.info(f"wrote {n} trace events -> {engine_cfg.trace_out}")
+    if engine_cfg.metrics_out:
+        extras = [{"kind": "metric", **m} for m in REGISTRY.collect()]
+        n = TIMELINE.write_jsonl(engine_cfg.metrics_out, extra=extras)
+        log.info(f"wrote {n} records -> {engine_cfg.metrics_out}")
     return losses, times
 
 
@@ -241,10 +272,24 @@ def build_parser() -> argparse.ArgumentParser:
                     help="journal segment id for multi-controller jobs: "
                          "each host appends to its own manifest segment, "
                          "merged deterministically on read/compaction")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON of the pipeline "
+                         "spans here (load in chrome://tracing or "
+                         "ui.perfetto.dev); also enables the span tracer")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write per-step stall-attribution records and the "
+                         "final metrics-registry collection as JSON Lines")
+    ap.add_argument("--trace-buffer", type=int, default=65536,
+                    help="span ring-buffer capacity; oldest spans drop "
+                         "beyond this (the Chrome export reports drops)")
     ap.add_argument("--clean", action="store_true", default=True)
     ap.add_argument("--fail-at", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-level", default="info",
+                    choices=("debug", "info", "warning", "error"),
+                    help="driver log verbosity (default keeps the "
+                         "human-readable step lines)")
     return ap
 
 

@@ -93,20 +93,31 @@ class MaintenanceService:
         #: test seam: callable(point:str) fired at named task
         #: boundaries; raising InjectedCrash simulates a worker kill
         self.crash_hook = None
-        self.gc_runs = 0
-        self.gc_swept = 0
-        self.scrub_runs = 0
-        self.scrubbed = 0
-        self.scrub_transient_skips = 0
-        self.corrupt_found = 0
-        self.orphans_swept = 0
-        self.merge_runs = 0
-        self.fold_runs = 0
-        self.folded_patches = 0
-        self.fold_transient_skips = 0
-        self.peer_prune_runs = 0
-        self.peer_pruned = 0
-        self.resumed = 0
+        from repro.obs.metrics import InstrumentSet
+        self._inst = InstrumentSet("maintenance")
+        #: stats() counter keys, synced by tests/test_observability.py
+        self.KEYS = ("gc_runs", "gc_swept", "scrub_runs", "scrubbed",
+                     "scrub_transient_skips", "corrupt_found",
+                     "orphans_swept", "merge_runs", "fold_runs",
+                     "folded_patches", "fold_transient_skips",
+                     "peer_prune_runs", "peer_pruned", "resumed")
+        for k in self.KEYS:
+            self._inst.counter(k)
+        #: per-task worker latency, by task kind
+        self._task_time = self._inst.histogram("task_time_s")
+
+    def __getattr__(self, name):
+        # legacy attribute surface: self.gc_runs etc. read counters
+        if name != "KEYS" and name in getattr(self, "KEYS", ()):
+            return int(self._inst.get(name).value)
+        raise AttributeError(name)
+
+    def instruments(self):
+        """The backing :class:`~repro.obs.metrics.InstrumentSet`."""
+        return self._inst
+
+    def _count(self, attr: str, n: int = 1):
+        self._inst.counter(attr).add(n)
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -247,6 +258,13 @@ class MaintenanceService:
 
     def _execute(self, req: Tuple[str, Any]) -> None:
         kind, arg = req
+        from repro.obs.trace import trace_span
+        t0 = time.perf_counter()
+        with trace_span(f"maint.{kind}", "maintenance"):
+            self._dispatch(kind, arg)
+        self._task_time.observe(time.perf_counter() - t0)
+
+    def _dispatch(self, kind: str, arg: Any) -> None:
         if kind == "gc":
             self._run_gc(arg)
         elif kind == "scrub":
@@ -264,7 +282,7 @@ class MaintenanceService:
 
     def _resume(self, rec: dict) -> None:
         task = rec.get("task")
-        self.resumed += 1
+        self._count("resumed")
         if task == "gc":
             self._gc_sweep(int(rec["id"]),
                            [tuple(d) for d in rec.get("doomed", [])],
@@ -307,7 +325,7 @@ class MaintenanceService:
             chunk = doomed[pos:pos + self.gc_slice]
             removed = self.store.gc_apply(chunk, retention_fulls,
                                           crash_hook=hook)
-            self.gc_swept += sum(removed.values())
+            self._count("gc_swept", sum(removed.values()))
             pos += len(chunk)
             self._crash("gc:swept_slice")
             self.progress.append({"task": "gc", "id": tid,
@@ -315,7 +333,7 @@ class MaintenanceService:
             self._crash("gc:cursored")
         self.progress.append({"task": "gc", "id": tid, "op": "done"})
         self.progress.compact_if_idle()
-        self.gc_runs += 1
+        self._count("gc_runs")
         self._queue_peer_prune()
 
     # ------------------------------------------------------------------
@@ -333,8 +351,8 @@ class MaintenanceService:
         # this host replicated that fell out (folded patches, GC'd
         # chains, dropped quarantine) is deleted from the peers
         keep = {key for _, key in self.store.scrub_targets()}
-        self.peer_pruned += int(prune(keep))
-        self.peer_prune_runs += 1
+        self._count("peer_pruned", int(prune(keep)))
+        self._count("peer_prune_runs")
 
     # ------------------------------------------------------------------
     # integrity scrub: journaled walk over cold blobs
@@ -360,25 +378,25 @@ class MaintenanceService:
                     # blob, the next periodic scrub retries it — a
                     # transient must never poison the worker (every
                     # later flush() would fail on an intact store)
-                    self.scrub_transient_skips += 1
+                    self._count("scrub_transient_skips")
                     continue
-                self.scrubbed += 1
+                self._count("scrubbed")
                 if reason is not None:
                     if self.store.quarantine(kind, key, reason):
-                        self.corrupt_found += 1
+                        self._count("corrupt_found")
             pos = min(pos + self.scrub_slice, len(entries))
             self._crash("scrub:swept_slice")
             self.progress.append({"task": "scrub", "id": tid,
                                   "op": "cursor", "pos": pos})
             self._crash("scrub:cursored")
         try:
-            self.orphans_swept += self.store.backend.sweep_orphans(
-                self.orphan_min_age_s)
+            self._count("orphans_swept", self.store.backend.sweep_orphans(
+                self.orphan_min_age_s))
         except (RetryExhaustedError, TransientStoreError):
-            self.scrub_transient_skips += 1  # orphans wait for next pass
+            self._count("scrub_transient_skips")  # orphans wait for next pass
         self.progress.append({"task": "scrub", "id": tid, "op": "done"})
         self.progress.compact_if_idle()
-        self.scrub_runs += 1
+        self._count("scrub_runs")
         self._last_scrub = time.monotonic()
 
     # ------------------------------------------------------------------
@@ -411,7 +429,7 @@ class MaintenanceService:
                 # flaky infrastructure, not corruption: leave the plan
                 # journaled (it resumes on the next start / request)
                 # — a transient must never poison the worker
-                self.fold_transient_skips += 1
+                self._count("fold_transient_skips")
                 return
             if updates is None:
                 # chain or base gone since the plan (superseded by a
@@ -426,7 +444,7 @@ class MaintenanceService:
                 try:
                     self.store.fold_slice(base_key, chunk)
                 except (RetryExhaustedError, TransientStoreError):
-                    self.fold_transient_skips += 1
+                    self._count("fold_transient_skips")
                     return                # cursor journaled: resumes here
                 except FileNotFoundError:
                     # base deleted under the fold (concurrent GC after a
@@ -446,8 +464,8 @@ class MaintenanceService:
         self.store.fold_commit(base_key, patch_keys, state_step)
         self.progress.append({"task": "fold", "id": tid, "op": "done"})
         self.progress.compact_if_idle()
-        self.fold_runs += 1
-        self.folded_patches += len(patch_keys)
+        self._count("fold_runs")
+        self._count("folded_patches", len(patch_keys))
         self._queue_peer_prune()
 
     # ------------------------------------------------------------------
@@ -463,7 +481,7 @@ class MaintenanceService:
         self.store.merge_journal()
         self.progress.append({"task": "merge", "id": tid, "op": "done"})
         self.progress.compact_if_idle()
-        self.merge_runs += 1
+        self._count("merge_runs")
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:

@@ -1,0 +1,29 @@
+"""Unified checkpoint-pipeline observability.
+
+Three layers over one currency:
+
+* :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram instruments
+  + the process-global :data:`~repro.obs.metrics.REGISTRY`; components
+  register per-instance :class:`~repro.obs.metrics.InstrumentSet`\\ s
+  and their legacy ``stats()`` dicts become thin views.
+* :mod:`repro.obs.trace` — bounded ring-buffer span tracer
+  (:data:`~repro.obs.trace.TRACER`, ``with trace_span(...)``,
+  ``@traced``) with a Chrome ``trace_event`` exporter for
+  chrome://tracing / Perfetto.
+* :mod:`repro.obs.timeline` — :class:`~repro.obs.timeline.StepTimeline`
+  charging each step's wall to {compute, snapshot-stall, flush-stall,
+  queue-backpressure, recovery}; feeds the online (f, b) tuner a
+  stall-fraction signal.
+
+``launch/train.py --trace-out/--metrics-out/--trace-buffer`` emit the
+artifacts; ``repro.analysis.trace_report`` renders them.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, InstrumentSet,
+                               MetricsRegistry, REGISTRY)
+from repro.obs.timeline import STALL_CATEGORIES, StepTimeline, TIMELINE
+from repro.obs.trace import SpanTracer, TRACER, trace_span, traced
+
+__all__ = ["Counter", "Gauge", "Histogram", "InstrumentSet",
+           "MetricsRegistry", "REGISTRY", "SpanTracer", "TRACER",
+           "trace_span", "traced", "StepTimeline", "TIMELINE",
+           "STALL_CATEGORIES"]
