@@ -1,0 +1,206 @@
+"""Exp. 18: quantized row differentials (--diff-quant int8/int4).
+
+Three measurements on the exp16 synthetic MoE workload (one big expert
+table, ~1% of rows dirty per persist interval), now with the row spans
+quantized on the wire:
+
+* **bytes written per persist** — raw row spans (PR 7's row mode) vs
+  int8 vs nibble-packed int4 payloads. The headline number: int4 must
+  write >= 3x fewer bytes/persist than raw row mode at ~1% dirty rows
+  (CI asserts this from the smoke artifact). The raw/quantized gap is
+  the per-row absmax codec's realized ratio minus frame/scale overhead.
+* **recovery wall** — a 16-patch quantized chain replayed on the host
+  overlay path (``load_latest_state``) and the device replay path
+  (``recovery.load_state_device``, fused dequantize-and-scatter); both
+  must land bit-identical states.
+* **convergence parity** — a small Adam regression run that crashes
+  mid-training and resumes from its persisted chain: the final loss
+  with int4 + error feedback lands within noise of the raw-chain run
+  (quantization error is fed back, not compounded).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.checkpoint.config import StoreConfig
+from repro.checkpoint.store import walk_leaves
+from repro.core import recovery
+from repro.core.lowdiff_plus import _NumpyAdam
+
+ROWS = 8192               # expert-table rows
+DM = 256                  # 8 MiB fp32 per component (params/mu/nu)
+HOT_BLOCKS = 8            # dirty spans per interval...
+BLOCK = 10                # ...of this many rows: ~1% of ROWS
+PERSISTS = 4
+
+
+def make_replica(diff_quant="off", rows=ROWS, dm=DM, seed=0):
+    rng = np.random.default_rng(seed)
+    params = {"table": (0.1 * rng.standard_normal(
+        (rows, dm))).astype(np.float32)}
+    mu = {k: np.zeros_like(v) for k, v in params.items()}
+    nu = {k: np.zeros_like(v) for k, v in params.items()}
+    return _NumpyAdam(params, mu, nu, 0, lr=1e-3, track_dirty=True,
+                      dirty_granularity="row", diff_quant=diff_quant)
+
+
+def sparse_row_grads(rep, seed):
+    """~1% of rows nonzero, in HOT_BLOCKS random contiguous blocks."""
+    rng = np.random.default_rng(seed)
+    rows, dm = rep.params["table"].shape
+    g = np.zeros((rows, dm), np.float32)
+    for start in rng.integers(0, rows - BLOCK, HOT_BLOCKS):
+        g[start:start + BLOCK] = rng.standard_normal(
+            (BLOCK, dm)).astype(np.float32)
+    return {"table": g}
+
+
+def bench_bytes(out, tmp):
+    per_mode = {}
+    for mode in ("raw", "int8", "int4"):
+        dq = "off" if mode == "raw" else mode
+        store = StoreConfig.from_legacy(f"{tmp}/{mode}").build()
+        rep = make_replica(dq)
+        rep.apply(sparse_row_grads(rep, 0))
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        base_bytes = store.bytes_written
+        t_persist = []
+        for step in range(2, PERSISTS + 2):
+            rep.apply(sparse_row_grads(rep, step))
+            updates, _ = rep.snapshot_dirty()
+            t0 = time.perf_counter()
+            store.save_patch(step, base, updates)
+            t_persist.append(time.perf_counter() - t0)
+        per_mode[mode] = (store.bytes_written - base_bytes) / PERSISTS
+        out(row(f"exp18_{mode}_persist_bytes", 0.0,
+                f"{per_mode[mode] / 1e6:.3f}MB"))
+        out(row(f"exp18_{mode}_persist_latency",
+                float(np.median(t_persist))))
+        # host and device replay of the same chain must agree bitwise
+        got, _ = store.load_latest_state()
+        dgot, _ = recovery.load_state_device(store)
+        for path, leaf in walk_leaves(got):
+            np.testing.assert_array_equal(
+                np.asarray(leaf), np.asarray(dict(walk_leaves(dgot))[path]),
+                err_msg=f"{mode}: {path}")
+        if mode == "raw":
+            # raw chains additionally recover the exact replica bytes
+            np.testing.assert_array_equal(got["params"]["table"],
+                                          rep.params["table"])
+        else:
+            # quantized chains land within the absmax codec's error
+            err = float(np.abs(np.asarray(got["params"]["table"])
+                               - rep.params["table"]).max())
+            scale = float(np.abs(rep.params["table"]).max())
+            assert err <= scale, f"{mode} recovery error {err}"
+        store.close()
+    for mode in ("int8", "int4"):
+        ratio = per_mode["raw"] / max(per_mode[mode], 1.0)
+        out(row(f"exp18_bytes_ratio_raw_over_{mode}", 0.0, f"x{ratio:.1f}"))
+    return per_mode["raw"] / max(per_mode["int4"], 1.0)
+
+
+def bench_recovery(out, tmp):
+    for dq in ("int8", "int4"):
+        store = StoreConfig.from_legacy(f"{tmp}/rec_{dq}").build()
+        rep = make_replica(dq)
+        rep.apply(sparse_row_grads(rep, 0))
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        for step in range(2, 18):
+            rep.apply(sparse_row_grads(rep, step))
+            updates, _ = rep.snapshot_dirty()
+            store.save_patch(step, base, updates)
+        t_host = timeit(lambda: store.load_latest_state(),
+                        warmup=1, iters=3)
+        t_dev = timeit(lambda: recovery.load_state_device(store),
+                       warmup=1, iters=3)
+        out(row(f"exp18_recovery_host_{dq}_chain_16", t_host))
+        out(row(f"exp18_recovery_device_{dq}_chain_16", t_dev))
+        store.close()
+
+
+def _regression_loss(w, x, y):
+    r = x @ w.T - y
+    return float(np.mean(r * r))
+
+
+def bench_convergence(out, tmp):
+    """Crash-and-resume training parity: raw vs int4 + error feedback.
+
+    A least-squares Adam run persists an incremental chain every step,
+    "crashes" at the midpoint, resumes from the recovered chain, and
+    trains to the end. With error feedback the quantized chain's final
+    loss lands within noise of the raw chain's."""
+    rng = np.random.default_rng(7)
+    n_out, n_in, n_data, steps, crash_at = 64, 16, 256, 240, 120
+    x = rng.standard_normal((n_data, n_in)).astype(np.float32)
+    w_true = rng.standard_normal((n_out, n_in)).astype(np.float32)
+    y = x @ w_true.T + 0.01 * rng.standard_normal(
+        (n_data, n_out)).astype(np.float32)
+
+    def grads(w):
+        r = x @ w.T - y                       # (n_data, n_out)
+        return (2.0 / n_data) * r.T @ x       # (n_out, n_in)
+
+    final = {}
+    for mode in ("raw", "int4"):
+        dq = "off" if mode == "raw" else mode
+        store = StoreConfig.from_legacy(f"{tmp}/conv_{mode}").build()
+        w0 = np.zeros((n_out, n_in), np.float32)
+        rep = _NumpyAdam({"w": w0}, {"w": np.zeros_like(w0)},
+                         {"w": np.zeros_like(w0)}, 0, lr=5e-2,
+                         track_dirty=True, dirty_granularity="row",
+                         diff_quant=dq)
+        base = store.save_full(1, rep.snapshot_full(), record_names=True)
+        for step in range(crash_at):
+            rep.apply({"w": grads(rep.params["w"])})
+            updates, _ = rep.snapshot_dirty()
+            store.save_patch(2 + step, base, updates)
+        # crash: rebuild the replica from the persisted chain alone
+        state, _ = store.load_latest_state()
+        rep = _NumpyAdam({"w": np.array(state["params"]["w"])},
+                         {"w": np.array(state["mu"]["w"])},
+                         {"w": np.array(state["nu"]["w"])},
+                         int(state["count"]), lr=5e-2,
+                         track_dirty=True, dirty_granularity="row",
+                         diff_quant=dq)
+        base = store.save_full(2 + crash_at, rep.snapshot_full(),
+                               record_names=True)
+        for step in range(crash_at, steps):
+            rep.apply({"w": grads(rep.params["w"])})
+            updates, _ = rep.snapshot_dirty()
+            store.save_patch(3 + step, base, updates)
+        final[mode] = _regression_loss(rep.params["w"], x, y)
+        out(row(f"exp18_final_loss_{mode}", 0.0, f"{final[mode]:.6f}"))
+        store.close()
+    # parity: the quantized-chain run converges like the raw run (the
+    # noise floor is the 0.01 label noise -> loss ~1e-4 either way)
+    rel = abs(final["int4"] - final["raw"]) / max(final["raw"], 1e-12)
+    out(row("exp18_convergence_rel_gap", 0.0, f"{rel:.4f}"))
+    assert rel < 0.25, (
+        f"int4+EF final loss {final['int4']:.6f} diverged from raw "
+        f"{final['raw']:.6f} (rel gap {rel:.3f})")
+
+
+def main(out=print):
+    tmp = tempfile.mkdtemp(prefix="exp18_")
+    try:
+        ratio = bench_bytes(out, tmp)
+        bench_recovery(out, tmp)
+        bench_convergence(out, tmp)
+        if ratio < 3.0:
+            raise AssertionError(
+                f"quantized persist regression: int4 wrote only "
+                f"{ratio:.1f}x fewer bytes than raw row spans at ~1% "
+                f"dirty rows (acceptance bar: 3x)")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

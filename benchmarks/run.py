@@ -37,6 +37,7 @@ MODULES = [
     # third element (optional) = entry point, for modules hosting more
     # than one experiment
     ("exp17_device_replay", "benchmarks.recovery_bench", "main17"),
+    ("exp18_quant_diff", "benchmarks.quant_diff"),
 ]
 
 

@@ -24,7 +24,7 @@ Writes go through :func:`atomic_write` (temp file + fsync + rename +
 parent-directory fsync), so readers never observe a torn checkpoint and
 a crash immediately after the rename cannot lose it. Supports arbitrary
 nesting of dict / list / tuple / NamedTuple / SparseGrad / QuantGrad /
-PackedDiff / jax arrays / numpy / python scalars.
+PackedDiff / QuantSpan / jax arrays / numpy / python scalars.
 """
 from __future__ import annotations
 
@@ -44,6 +44,7 @@ import numpy as np
 from repro.checkpoint.patchset import PatchSet, RowUpdate
 from repro.compression.packed import PackedDiff
 from repro.compression.quant import QuantGrad
+from repro.compression.quant_span import QuantSpan
 from repro.compression.sparse import SparseGrad
 
 FRAME_MAGIC = b"RFRAME01"
@@ -224,6 +225,14 @@ def _pack(obj, arrays: List[np.ndarray]):
         return {"__t": "packed", "shape": list(obj.shape), "block": obj.block,
                 "q": _arr(obj.q, arrays), "indices": _arr(idx, arrays),
                 "scale": _arr(obj.scale, arrays)}
+    if isinstance(obj, QuantSpan):
+        # quantized row-span payload: wire bytes travel verbatim — no
+        # backend ever re-encodes (and so never re-quantizes) them
+        return {"__t": "qspan", "shape": list(obj.shape),
+                "bits": int(obj.bits), "dtype": str(obj.dtype),
+                "starts": [int(s) for s in obj.starts],
+                "qs": [_arr(q, arrays) for q in obj.qs],
+                "scales": [_arr(s, arrays) for s in obj.scales]}
     if isinstance(obj, dict):
         return {"__t": "dict",
                 "items": {k: _pack(v, arrays) for k, v in obj.items()}}
@@ -266,6 +275,14 @@ def _unpack(node, arrays):
                                      np.int32),
                           _get(node["scale"], arrays),
                           tuple(node["shape"]), node["block"])
+    if t == "qspan":
+        return QuantSpan(starts=tuple(int(s) for s in node["starts"]),
+                         qs=[np.asarray(_get(i, arrays))
+                             for i in node["qs"]],
+                         scales=[np.asarray(_get(i, arrays))
+                                 for i in node["scales"]],
+                         shape=tuple(node["shape"]), bits=int(node["bits"]),
+                         dtype=node["dtype"])
     if t == "dict":
         return {k: _unpack(v, arrays) for k, v in node["items"].items()}
     if t == "nt":

@@ -56,6 +56,7 @@ from repro.checkpoint import io as cio
 from repro.checkpoint.backends import LocalFSBackend, StorageBackend
 from repro.checkpoint.patchset import (PatchSet, RowUpdate, Span,
                                        merge_span_chain)
+from repro.compression.quant_span import QuantSpan
 from repro.checkpoint.journal import (JournalTap, ManifestJournal,
                                       MemoryJournal,
                                       SegmentedManifestJournal, _entry_key)
@@ -97,9 +98,9 @@ def walk_leaves(tree, prefix: str = ""):
     if isinstance(tree, dict):
         for k, v in tree.items():
             yield from walk_leaves(v, f"{prefix}{k}/")
-    elif isinstance(tree, RowUpdate):
-        # a row-sparse leaf update is itself a leaf: its spans address
-        # one frame payload array, not nested children
+    elif isinstance(tree, (RowUpdate, QuantSpan)):
+        # a row-sparse (or quantized) leaf update is itself a leaf: its
+        # spans address one frame payload array, not nested children
         yield prefix[:-1], tree
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
@@ -130,14 +131,19 @@ def payload_names(state) -> Dict[str, str]:
 
 def merge_updates(state, updates) -> None:
     """Overlay a patch blob's partial state dict onto ``state`` in
-    place (leaf-wise; nested dicts merge, a :class:`RowUpdate` splices
-    its row spans into the base leaf, anything else replaces)."""
+    place (leaf-wise; nested dicts merge, a :class:`RowUpdate` or
+    :class:`~repro.compression.quant_span.QuantSpan` splices its row
+    spans into the base leaf, anything else replaces). A QuantSpan is
+    dequantized *here*, exactly once: the merged state always holds raw
+    rows, so a later persist or fold can never re-quantize an already
+    quantized value."""
     for k, v in updates.items():
         if isinstance(v, dict) and isinstance(state.get(k), dict):
             merge_updates(state[k], v)
-        elif isinstance(v, RowUpdate):
+        elif isinstance(v, (RowUpdate, QuantSpan)):
             # base leaves are often read-only memmap views of the full
             # frame — splice into a private copy, never the file
+            # (QuantSpan.spans() yields dequantized raw rows)
             base = np.array(state[k])
             for sp in v.spans():
                 base[sp.start:sp.stop] = sp.data
@@ -302,11 +308,25 @@ class CheckpointStore:
             sp.set(bytes=n)
         entry = {"step": step, "key": key, "base": base_key,
                  "path": self.backend.url(key), "bytes": n}
-        extents = {path: leaf.extents()
-                   for path, leaf in walk_leaves(updates)
-                   if isinstance(leaf, RowUpdate)}
+        extents = {}
+        span_bytes = 0
+        codecs = set()
+        for path, leaf in walk_leaves(updates):
+            if isinstance(leaf, (RowUpdate, QuantSpan)):
+                extents[path] = leaf.extents()
+                if isinstance(leaf, QuantSpan):
+                    codecs.add(f"int{leaf.bits}")
+                    span_bytes += leaf.logical_nbytes
+                else:
+                    span_bytes += leaf.nbytes
         if extents:
             entry["extents"] = extents
+            # logical (dequantized-overlay) span bytes, alongside the
+            # stored "bytes" the amplification trigger reads — the gap
+            # between the two is the quantizer's realized ratio
+            entry["span_bytes"] = int(span_bytes)
+        if codecs:
+            entry["codec"] = sorted(codecs)
         self._record("patches", entry, n)
         self._update_protected()
         with self._lock:
@@ -315,12 +335,18 @@ class CheckpointStore:
         return key
 
     def chain_amplification(self, base_key: Optional[str] = None) -> float:
-        """Chain-read amplification of a base full's patch chain: bytes
-        recovery must overlay on top of the base frame, divided by the
-        base frame's own bytes. Defaults to the newest addressable full
-        (the chain ``fold_plan`` would pick). 0.0 when there is no
-        chain. Lock-only — cheap enough to evaluate per persist, which
-        is exactly what the adaptive fold trigger does."""
+        """Chain-read amplification of a base full's patch chain:
+        **stored** chain bytes recovery must read on top of the base
+        frame, divided by the base frame's own bytes. Each patch entry's
+        ``bytes`` is what ``StorageBackend.put`` actually wrote — the
+        post-codec wire size — so a quantized chain (``--diff-quant``)
+        that is 4-8x smaller on disk amplifies 4-8x less and does *not*
+        trigger early folds on its logical (dequantized) span size;
+        that logical size is journaled separately as ``span_bytes``.
+        Defaults to the newest addressable full (the chain ``fold_plan``
+        would pick). 0.0 when there is no chain. Lock-only — cheap
+        enough to evaluate per persist, which is exactly what the
+        adaptive fold trigger does."""
         with self._lock:
             if base_key is None:
                 fulls = [e for e in self.manifest["fulls"] if "names" in e]
@@ -628,7 +654,11 @@ class CheckpointStore:
             except FileNotFoundError:
                 return None
             for path, leaf in walk_leaves(blob["updates"]):
-                if isinstance(leaf, RowUpdate):
+                if isinstance(leaf, (RowUpdate, QuantSpan)):
+                    # QuantSpan.spans() dequantizes: the fold is
+                    # dequantize -> newest-wins merge -> write *raw*
+                    # into the base frame, so a folded base never holds
+                    # (and can never re-quantize) quantized bytes
                     spans = leaf.spans()
                     shapes[path] = tuple(int(x) for x in leaf.shape)
                 else:

@@ -5,3 +5,6 @@ from repro.compression.sparse import (  # noqa: F401
 )
 from repro.compression.quant import QuantGrad, quant_compress, quant_decompress  # noqa: F401
 from repro.compression.error_feedback import ef_compress_tree, ef_init  # noqa: F401
+from repro.compression.quant_span import (  # noqa: F401
+    DIFF_QUANTS, QUANT_METER, QuantMeter, QuantSpan, quant_bits,
+)

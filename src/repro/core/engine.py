@@ -38,6 +38,7 @@ FLAG_MAP: Dict[str, tuple] = {
     "persist_mode": ("engine", "persist_mode"),
     "persist_threshold": ("engine", "persist_threshold"),
     "dirty_granularity": ("engine", "dirty_granularity"),
+    "diff_quant": ("engine", "diff_quant"),
     "fold_interval": ("engine", "fold_interval"),
     "fold_amplification": ("engine", "fold_amplification"),
     "replay_window": ("engine", "replay_window"),
@@ -89,6 +90,7 @@ class EngineConfig:
     persist_mode: str = "full"
     persist_threshold: float = 0.0
     dirty_granularity: str = "leaf"
+    diff_quant: str = "off"     #: quantize row-span patches (int8/int4)
     fold_interval: int = 16
     fold_amplification: float = 1.5
     replay_window: int = 0
@@ -116,6 +118,10 @@ class EngineConfig:
             raise StoreConfigError(
                 f"dirty_granularity: {self.dirty_granularity!r} is not "
                 f"'leaf'/'row'")
+        if self.diff_quant not in ("off", "int8", "int4"):
+            raise StoreConfigError(
+                f"diff_quant: {self.diff_quant!r} is not one of "
+                f"('off', 'int8', 'int4')")
         if self.compressor not in ("topk", "quant8", "packed"):
             raise StoreConfigError(
                 f"compressor: {self.compressor!r} is not one of "
@@ -237,7 +243,8 @@ def make_engine(cfg: EngineConfig, model, store=None):
                            persist_threshold=cfg.persist_threshold,
                            dirty_granularity=cfg.dirty_granularity,
                            fold_interval=cfg.fold_interval,
-                           fold_amplification=cfg.fold_amplification)
+                           fold_amplification=cfg.fold_amplification,
+                           diff_quant=cfg.diff_quant)
     if cfg.strategy == "checkfreq":
         return CheckFreq(model, store, lr=cfg.lr, interval=10)
     if cfg.strategy == "gemini":

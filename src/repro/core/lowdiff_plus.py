@@ -44,6 +44,9 @@ import numpy as np
 
 from repro.checkpoint.patchset import RowUpdate, mask_to_intervals
 from repro.checkpoint.store import CheckpointStore
+from repro.compression.quant_span import (DIFF_QUANTS, QUANT_METER,
+                                          QuantSpan, decode_rows,
+                                          encode_rows, quant_bits)
 from repro.core.reusing_queue import (CheckpointingError, ReusingQueue,
                                       wait_drained)
 from repro.core.snapshot import host_copy, start_host_transfer
@@ -74,16 +77,31 @@ class _NumpyAdam:
     into one span before snapshot (re-writing a clean row is a
     byte-identical no-op, so bridging trades a few redundant bytes for
     far fewer spans; a dirty-but-deferred row is never bridged over).
-    Scalar and single-row leaves keep leaf granularity."""
+    Scalar and single-row leaves keep leaf granularity.
+
+    ``diff_quant`` ("int8"/"int4") additionally quantizes each persisted
+    row span against per-row absmax scales
+    (:class:`~repro.compression.quant_span.QuantSpan` payloads instead
+    of raw :class:`RowUpdate`), holding a per-row **error-feedback
+    residual** per component: the next quantization of a row encodes
+    ``value + residual``, so deferred quantization error is corrected
+    on the next persist instead of silently drifting. With a persist
+    threshold active, a row whose residual exceeds the threshold is
+    immediately re-marked dirty (at most once per quantized persist —
+    a re-marked row that re-persists without a fresh gradient is not
+    re-marked again, so a static row cannot ping-pong forever)."""
 
     GRANULARITIES = ("leaf", "row")
 
     def __init__(self, params, mu, nu, count, *, lr, b1=0.9, b2=0.999,
                  eps=1e-8, track_dirty: bool = False,
-                 dirty_granularity: str = "leaf", coalesce_rows: int = 4):
+                 dirty_granularity: str = "leaf", coalesce_rows: int = 4,
+                 diff_quant: str = "off"):
         if dirty_granularity not in self.GRANULARITIES:
             raise ValueError(f"dirty_granularity must be one of "
                              f"{self.GRANULARITIES}")
+        if diff_quant not in DIFF_QUANTS:
+            raise ValueError(f"diff_quant must be one of {DIFF_QUANTS}")
         self.params = {k: np.array(v, np.float32) if v.dtype != np.float32
                        else np.array(v) for k, v in params.items()}
         self.dtypes = {k: v.dtype for k, v in params.items()}
@@ -103,12 +121,29 @@ class _NumpyAdam:
         #: yet)
         self._row_dirty: Dict[str, np.ndarray] = {}
         self._row_drift: Dict[str, np.ndarray] = {}
+        self.diff_quant = diff_quant
+        #: per-(component, leaf) error-feedback residuals (f32, lazily
+        #: allocated on a leaf's first quantized persist)
+        self._row_resid: Dict[tuple, np.ndarray] = {}
+        #: rows dirty *only* because quantization error re-marked them —
+        #: they get one corrective persist, not an endless loop
+        self._row_qpending: Dict[str, np.ndarray] = {}
         if track_dirty and dirty_granularity == "row":
             for k, v in self.params.items():
                 if v.ndim >= 1 and v.shape[0] > 1:
                     self._row_dirty[k] = np.ones(v.shape[0], bool)
                     self._row_drift[k] = np.zeros(v.shape[0], np.float32)
+                    if diff_quant != "off":
+                        self._row_qpending[k] = np.zeros(v.shape[0], bool)
         self.skipped_applies = 0
+
+    def _resid(self, comp: str, k: str, like: np.ndarray) -> np.ndarray:
+        key = (comp, k)
+        r = self._row_resid.get(key)
+        if r is None:
+            r = np.zeros(like.shape, np.float32)
+            self._row_resid[key] = r
+        return r
 
     @staticmethod
     def _row_any(a: np.ndarray) -> np.ndarray:
@@ -148,6 +183,12 @@ class _NumpyAdam:
                     self._drift[k] += float(np.max(np.abs(upd)))
                 if rd is not None:
                     rd |= changed
+                    qp = self._row_qpending.get(k)
+                    if qp is not None:
+                        # a fresh gradient supersedes a pending
+                        # quantization correction: the row is again
+                        # eligible for an error-feedback re-mark
+                        qp[changed] = False
                     if upd.size:
                         rowmax = np.abs(
                             upd.reshape(upd.shape[0], -1)).max(axis=1)
@@ -172,6 +213,11 @@ class _NumpyAdam:
             for k in self._row_dirty:
                 self._row_dirty[k][:] = False
                 self._row_drift[k][:] = 0.0
+            # a raw full persists exact bytes: no deferred quant error
+            for r in self._row_resid.values():
+                r[:] = 0.0
+            for qp in self._row_qpending.values():
+                qp[:] = False
         return snap
 
     def snapshot_dirty(self, threshold: float = 0.0):
@@ -222,26 +268,88 @@ class _NumpyAdam:
             ivs = mask_to_intervals(persist, bridgeable=~rd,
                                     max_gap=self.coalesce_rows)
             rows = int(rd.shape[0])
-            for comp, src in (("params", self.params), ("mu", self.mu),
-                              ("nu", self.nu)):
-                a = src[k]
-                if len(ivs) == 1 and ivs[0] == (0, rows):
-                    # every row persists: plain whole-leaf update (same
-                    # blob shape leaf granularity writes)
-                    updates[comp][k] = np.array(a)
-                else:
-                    updates[comp][k] = RowUpdate(
-                        starts=np.asarray([s for s, _ in ivs], np.int64),
-                        rows=[np.array(a[s:e]) for s, e in ivs],
-                        shape=tuple(a.shape))
-            rd[persist] = False
-            dr[persist] = 0.0
+            if self.diff_quant == "off":
+                for comp, src in (("params", self.params),
+                                  ("mu", self.mu), ("nu", self.nu)):
+                    a = src[k]
+                    if len(ivs) == 1 and ivs[0] == (0, rows):
+                        # every row persists: plain whole-leaf update
+                        # (same blob shape leaf granularity writes)
+                        updates[comp][k] = np.array(a)
+                    else:
+                        updates[comp][k] = RowUpdate(
+                            starts=np.asarray([s for s, _ in ivs],
+                                              np.int64),
+                            rows=[np.array(a[s:e]) for s, e in ivs],
+                            shape=tuple(a.shape))
+                rd[persist] = False
+                dr[persist] = 0.0
+            else:
+                self._snapshot_quant(k, ivs, updates)
+                rd[persist] = False
+                # error feedback: the persisted rows now carry their
+                # quantization error as drift — below any threshold it
+                # just waits for the next real update to fold in, above
+                # it the row is re-marked dirty for one corrective pass
+                pres = self._row_resid[("params", k)]
+                qerr = np.abs(pres.reshape(rows, -1)).max(axis=1) \
+                    .astype(np.float32)
+                dr[persist] = qerr[persist]
+                if threshold > 0.0:
+                    p = self.params[k]
+                    scale = float(np.max(np.abs(p))) if p.size else 0.0
+                    qp = self._row_qpending[k]
+                    redo = (persist & (qerr > threshold * (scale + 1e-12))
+                            & ~qp)
+                    qp[persist] = False
+                    qp[redo] = True
+                    rd[redo] = True
             if rd.any():
                 self._drift[k] = float(dr[rd].max())
             else:
                 self._dirty.discard(k)
                 self._drift[k] = 0.0
         return updates, deferred
+
+    def _snapshot_quant(self, k: str, ivs, updates) -> None:
+        """Emit one leaf's persisting intervals as
+        :class:`~repro.compression.quant_span.QuantSpan` payloads,
+        folding each component's error-feedback residual into the values
+        being quantized and storing the fresh residual back.
+
+        The Adam moments floor at 8 bits even under ``int4``: the
+        update divides ``mu`` by ``sqrt(nu)``, so per-row quantization
+        error in the moments is amplified by ``1/sqrt(nu)`` at small-
+        moment elements — 4-bit moments make a resumed run take a huge
+        first step and diverge, while 4-bit params + 8-bit moments
+        resume within noise of raw (and still cut the patch stream
+        >4x)."""
+        pbits = quant_bits(self.diff_quant)
+        t0 = time.perf_counter()
+        bytes_in = bytes_out = 0
+        starts = tuple(int(s) for s, _ in ivs)
+        for comp, src in (("params", self.params), ("mu", self.mu),
+                          ("nu", self.nu)):
+            bits = pbits if comp == "params" else max(pbits, 8)
+            a = src[k]
+            res = self._resid(comp, k, a)
+            qs, scales = [], []
+            for s, e in ivs:
+                corrected = a[s:e].astype(np.float32) + res[s:e]
+                q, sc = encode_rows(corrected, bits)
+                c2 = corrected.reshape(e - s, -1)
+                deq = decode_rows(q, sc, c2.shape[1], bits)
+                res[s:e] = (c2 - deq).reshape(corrected.shape)
+                qs.append(q)
+                scales.append(sc)
+                bytes_in += int(a[s:e].nbytes)
+            span = QuantSpan(starts=starts, qs=qs, scales=scales,
+                             shape=tuple(a.shape), bits=bits,
+                             dtype=np.dtype(a.dtype).name)
+            bytes_out += span.nbytes
+            updates[comp][k] = span
+        QUANT_METER.add_encode(time.perf_counter() - t0, bytes_in,
+                               bytes_out)
 
     def remark_dirty(self, updates) -> None:
         """Undo a snapshot's clean-marking after its persist *failed*:
@@ -256,13 +364,23 @@ class _NumpyAdam:
             if rd is None:
                 continue
             dr = self._row_drift[k]
-            if isinstance(v, RowUpdate):
-                for sp in v.spans():
-                    rd[sp.start:sp.stop] = True
-                    dr[sp.start:sp.stop] = np.inf
+            if isinstance(v, (RowUpdate, QuantSpan)):
+                extents = v.extents()
             else:
-                rd[:] = True
-                dr[:] = np.inf
+                extents = [(0, rd.shape[0])]
+            for s, e in extents:
+                rd[s:e] = True
+                dr[s:e] = np.inf
+                for comp in ("params", "mu", "nu"):
+                    # the residual was computed against a snapshot that
+                    # never landed — stale correction must not leak into
+                    # the next quantization of these rows
+                    res = self._row_resid.get((comp, k))
+                    if res is not None:
+                        res[s:e] = 0.0
+                qp = self._row_qpending.get(k)
+                if qp is not None:
+                    qp[s:e] = False
 
 
 def fold_due(since_fold: int, fold_interval: int, amplification: float,
@@ -304,13 +422,22 @@ class LowDiffPlus:
                  persist_mode: str = "full",
                  persist_threshold: float = 0.0, fold_interval: int = 16,
                  dirty_granularity: str = "leaf",
-                 fold_amplification: float = 1.5):
+                 fold_amplification: float = 1.5,
+                 diff_quant: str = "off"):
         if persist_mode not in self.PERSIST_MODES:
             raise ValueError(f"persist_mode must be one of "
                              f"{self.PERSIST_MODES}")
         if dirty_granularity not in _NumpyAdam.GRANULARITIES:
             raise ValueError(f"dirty_granularity must be one of "
                              f"{_NumpyAdam.GRANULARITIES}")
+        if diff_quant not in DIFF_QUANTS:
+            raise ValueError(f"diff_quant must be one of {DIFF_QUANTS}")
+        if diff_quant != "off" and (persist_mode != "incremental"
+                                    or dirty_granularity != "row"):
+            raise ValueError(
+                "--diff-quant quantizes row-span differentials: it "
+                "requires --persist-mode incremental and "
+                "--dirty-granularity row")
         if (persist_mode == "incremental" and store is not None
                 and getattr(store.backend, "fmt", "npz") == "npz"):
             raise ValueError(
@@ -325,6 +452,7 @@ class LowDiffPlus:
         #: schedule a background fold after this many patches (0 = never)
         self.fold_interval = int(fold_interval)
         self.dirty_granularity = dirty_granularity
+        self.diff_quant = diff_quant
         #: adaptive fold trigger: fold when chain overlay bytes / base
         #: frame bytes crosses this (<= 0 disables; fold_interval caps)
         self.fold_amplification = float(fold_amplification)
@@ -363,7 +491,8 @@ class LowDiffPlus:
             host_copy(params), host_copy(mu), host_copy(nu),
             int(state["opt"].count), lr=self.lr,
             track_dirty=(self.persist_mode == "incremental"),
-            dirty_granularity=self.dirty_granularity)
+            dirty_granularity=self.dirty_granularity,
+            diff_quant=self.diff_quant)
         self._replica_step = int(state["step"])
         self._base_step = None
 
@@ -559,6 +688,8 @@ class LowDiffPlus:
                 "persists": self.persists,
                 "persist_mode": self.persist_mode,
                 "dirty_granularity": self.dirty_granularity,
+                "diff_quant": self.diff_quant,
+                "quant": QUANT_METER.stats(),
                 "patch_persists": self.patch_persists,
                 "leaves_deferred": self.leaves_deferred,
                 "fold_amplification": self.fold_amplification,

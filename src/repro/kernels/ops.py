@@ -112,6 +112,55 @@ def quant_compress(x: jax.Array, *, block: int = BLOCK,
     return q[:nb], scale[:nb]
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def quant_span_encode(x2d: jax.Array, *, bits: int,
+                      use_pallas: bool = True):
+    """Quantize a (rows, cols) f32 row block with per-row absmax scales:
+    returns (q (rows, wire_cols), scale (rows, 1)). Pads rows to the
+    kernel tile height and cols to even (int4) internally; the zero
+    padding cannot change any row's absmax, so the wire bytes match the
+    host codec exactly."""
+    n, cols = x2d.shape
+    cpad = (-cols) % 2 if bits == 4 else 0
+    rpad = (-n) % _pk.ROWS
+    xb = jnp.pad(x2d.astype(jnp.float32), ((0, rpad), (0, cpad)))
+    if use_pallas:
+        q, scale = _pk.span_pack(xb, bits=bits, interpret=_interpret())
+    else:
+        q, scale = _ref.span_pack_ref(xb, bits)
+    return q[:n], scale[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "bits", "use_pallas"))
+def quant_span_decode(q: jax.Array, scale: jax.Array, *, cols: int,
+                      bits: int, use_pallas: bool = True) -> jax.Array:
+    """Inverse of :func:`quant_span_encode`: wire bytes + per-row scales
+    -> dense f32 (rows, cols)."""
+    n = q.shape[0]
+    rpad = (-n) % _rp.ROWS
+    qp = jnp.pad(q, ((0, rpad), (0, 0)))
+    sp = jnp.pad(scale, ((0, rpad), (0, 0)))
+    if use_pallas:
+        dense = _rp.quant_span_decode(qp, sp, bits=bits,
+                                      interpret=_interpret())
+    else:
+        dense = _ref.span_decode_ref(qp, sp, bits)
+    return dense[:n, :cols]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def fused_span_apply(dst: jax.Array, start, q: jax.Array,
+                     scale: jax.Array, *, bits: int,
+                     use_pallas: bool = True) -> jax.Array:
+    """Fused dequantize + scatter of one quantized row-span payload into
+    rows [start, start+n) of state leaf ``dst`` — the device-recovery
+    overlay unit (``replay.quant_span_apply`` or its oracle)."""
+    if use_pallas:
+        return _rp.quant_span_apply(q, scale, dst, start, bits=bits,
+                                    interpret=_interpret())
+    return _ref.quant_span_apply_ref(q, scale, dst, start, bits=bits)
+
+
 def adam_hyper(lr, b1, b2, eps, count) -> jax.Array:
     c1 = 1.0 - b1 ** count
     c2 = 1.0 - b2 ** count

@@ -80,6 +80,53 @@ def pack_select(xb: jax.Array, k: int, *, interpret: bool = False):
     )(xb)
 
 
+def _span_pack_kernel(x_ref, q_ref, scale_ref, *, bits: int):
+    """Row-blocked absmax quantizer for state-row spans: one scale per
+    row, int8 values or two int4 nibbles per byte (two's complement,
+    even/odd columns -> low/high nibble)."""
+    x = x_ref[...].astype(jnp.float32)                  # (R, C)
+    qmax = 127.0 if bits == 8 else 7.0
+    # reciprocal-multiply (not /qmax): matches the numpy host codec bit
+    # for bit regardless of XLA's divide-by-constant rewrite
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(x), axis=1, keepdims=True)
+        * jnp.float32(1.0 / qmax), 1e-12)
+    qi = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    if bits == 8:
+        q_ref[...] = qi.astype(jnp.int8)
+    else:
+        R, C = qi.shape                                 # C even (pre-padded)
+        lo = jax.lax.slice(qi, (0, 0), (R, C - 1), (1, 2)) & 0xF
+        hi = jax.lax.slice(qi, (0, 1), (R, C), (1, 2)) & 0xF
+        q_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+    scale_ref[...] = scale
+
+
+def span_pack(xb: jax.Array, *, bits: int, interpret: bool = False):
+    """xb: (nb, cols) f32 rows (cols even when bits == 4) ->
+    (q (nb, wire_cols), scale f32 (nb, 1)) where wire_cols is cols for
+    int8 and cols // 2 for nibble-packed int4 — the fused row-span
+    quantizer feeding :class:`~repro.compression.quant_span.QuantSpan`."""
+    assert bits in (8, 4)
+    nb, cols = xb.shape
+    assert bits == 8 or cols % 2 == 0
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    wire_cols = cols if bits == 8 else cols // 2
+    wire_dt = jnp.int8 if bits == 8 else jnp.uint8
+    kernel = functools.partial(_span_pack_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, cols), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, wire_cols), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, wire_cols), wire_dt),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(xb)
+
+
 def _unpack_kernel(q_ref, idx_ref, scale_ref, out_ref, *, block: int):
     vals = q_ref[...].astype(jnp.float32) * scale_ref[...]      # (R, k)
     idxs = idx_ref[...]

@@ -98,3 +98,52 @@ def quant_apply_ref(q, scale, p, mu, nu, hyper):
     ``replay.quant_apply``. q: (nb, block) int8; scale: (nb, 1) f32."""
     g = q.astype(jnp.float32) * scale
     return adam_replay_update_ref(p, g, mu, nu, hyper)
+
+
+# -------------------- quantized row-span codec -----------------------
+
+def span_pack_ref(xb: jax.Array, bits: int):
+    """Oracle for ``pack.span_pack``: per-row absmax quantize (int8 or
+    nibble-packed int4). xb: (nb, cols) with cols even for int4."""
+    x = xb.astype(jnp.float32)
+    qmax = 127.0 if bits == 8 else 7.0
+    # reciprocal-multiply, matching the numpy host codec bit for bit
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(x), axis=1, keepdims=True)
+        * jnp.float32(1.0 / qmax), 1e-12)
+    qi = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    if bits == 8:
+        return qi.astype(jnp.int8), scale
+    lo = qi[:, 0::2] & 0xF
+    hi = qi[:, 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8), scale
+
+
+def span_decode_ref(q: jax.Array, scale: jax.Array, bits: int):
+    """Oracle for ``replay.quant_span_decode``: wire bytes -> dense f32
+    rows (cols = wire_cols for int8, 2*wire_cols for int4)."""
+    if bits == 8:
+        return q.astype(jnp.float32) * scale
+    u = q.astype(jnp.int32)
+    lo = u & 0xF
+    hi = (u >> 4) & 0xF
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    R, W = u.shape
+    even = jax.lax.broadcasted_iota(jnp.int32, (R, 2 * W), 1) % 2 == 0
+    g = jnp.where(even, jnp.repeat(lo, 2, axis=1),
+                  jnp.repeat(hi, 2, axis=1)).astype(jnp.float32)
+    return g * scale
+
+
+def quant_span_apply_ref(q, scale, dst, start, *, bits: int):
+    """Oracle for ``replay.quant_span_apply``: dequantize one row-span
+    payload and write it into rows [start, start+n) of ``dst``."""
+    n = q.shape[0]
+    dense = span_decode_ref(q, scale, bits)
+    cols = 1
+    for d in dst.shape[1:]:
+        cols *= int(d)
+    rows = dense[:n, :cols].reshape((n,) + dst.shape[1:]).astype(dst.dtype)
+    return jax.lax.dynamic_update_slice(
+        dst, rows, (start,) + (0,) * (dst.ndim - 1))

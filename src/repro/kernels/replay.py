@@ -158,3 +158,66 @@ def quant_apply(q, scale, p, mu, nu, hyper, *, interpret: bool = False):
     sspec = pl.BlockSpec((rows, 1), lambda i: (i, 0))
     return _call(_quant_apply_kernel, [wire, sspec], (q, scale),
                  p, mu, nu, hyper, block=block, interpret=interpret)
+
+
+# -------------------- quantized row-span recovery --------------------
+
+def _quant_span_kernel(q_ref, scale_ref, out_ref, *, bits: int):
+    """Dequantize a quantized row-span wire tile: int8 values or
+    nibble-packed int4 (low nibble = even column, two's complement) ->
+    dense f32 rows, scaled by the per-row absmax scale."""
+    q = q_ref[...]
+    if bits == 8:
+        g = q.astype(jnp.float32)
+    else:
+        u = q.astype(jnp.int32)
+        lo = u & 0xF
+        hi = (u >> 4) & 0xF
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        R, W = u.shape
+        even = jax.lax.broadcasted_iota(jnp.int32, (R, 2 * W), 1) % 2 == 0
+        g = jnp.where(even, jnp.repeat(lo, 2, axis=1),
+                      jnp.repeat(hi, 2, axis=1)).astype(jnp.float32)
+    out_ref[...] = g * scale_ref[...]
+
+
+def quant_span_decode(q, scale, *, bits: int, interpret: bool = False):
+    """q: (nb, wire_cols) + per-row scales -> dense f32 (nb, cols) where
+    cols is wire_cols (int8) or 2*wire_cols (int4). nb % ROWS == 0."""
+    assert bits in (8, 4)
+    nb, wc = q.shape
+    rows = min(ROWS, nb)
+    assert nb % rows == 0
+    cols = wc if bits == 8 else 2 * wc
+    kernel = functools.partial(_quant_span_kernel, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb // rows,),
+        in_specs=[pl.BlockSpec((rows, wc), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, cols), jnp.float32),
+        interpret=interpret,
+    )(q, scale)
+
+
+def quant_span_apply(q, scale, dst, start, *, bits: int,
+                     interpret: bool = False):
+    """Fused dequantize(+int4 unpack) of one quantized row-span payload,
+    scattered straight into rows [start, start+n) of the destination
+    state leaf ``dst`` (shape (N, *tail)) — the device-recovery overlay
+    unit. The dequant math is bit-identical to the host codec
+    (``repro.compression.quant_span``), so device overlay == host
+    overlay byte for byte."""
+    n = q.shape[0]
+    rpad = -n % ROWS
+    qp = jnp.pad(q, ((0, rpad), (0, 0)))
+    sp = jnp.pad(scale, ((0, rpad), (0, 0)))
+    dense = quant_span_decode(qp, sp, bits=bits, interpret=interpret)
+    cols = 1
+    for d in dst.shape[1:]:
+        cols *= int(d)
+    rows = dense[:n, :cols].reshape((n,) + dst.shape[1:]).astype(dst.dtype)
+    return jax.lax.dynamic_update_slice(
+        dst, rows, (start,) + (0,) * (dst.ndim - 1))

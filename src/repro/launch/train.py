@@ -238,6 +238,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "whole changed arrays; 'row' tracks dirtiness "
                          "per first-axis row and patches only the "
                          "changed row ranges")
+    ap.add_argument("--diff-quant", choices=("off", "int8", "int4"),
+                    default="off",
+                    help="quantize row-span patch payloads on the wire "
+                         "(per-row-block absmax scales, error-feedback "
+                         "residuals; requires --persist-mode incremental "
+                         "--dirty-granularity row)")
     ap.add_argument("--fold-interval", type=int, default=16,
                     help="fold the patch chain into its base frame after "
                          "this many incremental persists (0 = never)")

@@ -401,6 +401,21 @@ class TestStatsSync:
         m.reset()
         assert m.stats()["bytes"] == 0
 
+    def test_quant_meter(self):
+        from repro.compression.quant_span import QuantMeter
+        m = QuantMeter()
+        m.add_encode(0.01, 4096, 1024)
+        m.add_decode(0.002)
+        self._assert_backed(m)
+        s = m.stats()
+        assert set(s) == set(m.KEYS) | {"ratio"}
+        assert s["bytes_in"] == 4096 and s["bytes_out"] == 1024
+        assert s["ratio"] == pytest.approx(4.0)
+        assert s["encode_s"] == pytest.approx(0.01)
+        assert s["decode_s"] == pytest.approx(0.002)
+        m.reset()
+        assert m.stats()["bytes_in"] == 0 and m.stats()["ratio"] is None
+
     def test_reusing_queue(self):
         from repro.core.reusing_queue import ReusingQueue
         q = ReusingQueue(maxsize=2)
@@ -445,7 +460,11 @@ class TestStatsSync:
         """The process-global meter aggregates into the default
         registry under its prefix."""
         from repro.checkpoint.io import COPY_METER
+        from repro.compression.quant_span import QUANT_METER
         from repro.obs.metrics import REGISTRY
         names = {m["name"] for m in REGISTRY.collect()}
         assert any(n.startswith("copy_meter.") for n in names)
         assert COPY_METER.instruments().get("bytes") is not None
+        assert {"quant.encode_s", "quant.decode_s", "quant.bytes_in",
+                "quant.bytes_out"} <= names
+        assert QUANT_METER.instruments().get("encode_s") is not None

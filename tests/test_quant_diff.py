@@ -1,0 +1,512 @@
+"""Quantized row differential tests (--diff-quant int8/int4).
+
+Covers the quantized-wire acceptance criteria:
+  * the pure-numpy host codec, the jnp oracle and the Pallas
+    interpret-mode kernels produce bit-identical wire bytes, scales and
+    dequantized rows (odd columns, 1-D tails, both bit widths)
+  * :class:`QuantSpan` survives the frame codec round trip with its
+    wire bytes verbatim (no backend re-encodes or re-quantizes)
+  * int8 and int4 chains recover bit-identical to their dequantized
+    overlay on the host path (``load_latest_state``) AND the device
+    replay path (``recovery.load_state_device``) across all five
+    backends, including mixed raw + int8 + int4 chains, replayed and
+    folded
+  * a crash injected at ``patch:mid_span`` while folding a quantized
+    payload leaves a recoverable store
+  * error feedback: quantization error re-marks rows dirty at most once
+    per quantized persist (no static-row persist loop), residuals reset
+    on full snapshots and on failed persists
+  * ``chain_amplification`` measures *stored* (post-quantization) chain
+    bytes; the logical span size is journaled separately
+  * config plumbing: flag validation in LowDiffPlus and EngineConfig
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import StoreConfig, make_store
+from repro.checkpoint import io as cio
+from repro.checkpoint.patchset import Span, row_update_from_spans
+from repro.checkpoint.remote import FakeObjectStore, RemoteObjectBackend
+from repro.checkpoint.store import (CheckpointStore, merge_updates,
+                                    walk_leaves)
+from repro.compression.quant_span import (QUANT_METER, QuantSpan,
+                                          decode_rows, encode_rows)
+from repro.core import recovery
+from repro.core.engine import EngineConfig
+from repro.core.lowdiff_plus import LowDiffPlus, _NumpyAdam
+from repro.kernels import ops
+
+RNG = np.random.default_rng(23)
+
+
+def rand(shape, scale=1.0, rng=None):
+    return (scale * (rng or RNG).standard_normal(shape)).astype(np.float32)
+
+
+def assert_state_equal(a, b, context=""):
+    bleaves = dict(walk_leaves(b))
+    for path, leaf in walk_leaves(a):
+        np.testing.assert_array_equal(
+            np.asarray(leaf), np.asarray(bleaves[path]),
+            err_msg=f"{context}: leaf {path}")
+
+
+# --------------------------------------------------------------------------
+# codec parity: numpy host codec == jnp oracle == Pallas interpret mode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("shape", [(8, 32), (3, 7), (1, 1), (11, 48),
+                                   (5, 1), (16,)])
+def test_codec_three_way_bit_parity(bits, shape):
+    """Wire bytes, scales and dequantized values are bit-identical
+    across the numpy codec, the jnp oracle (use_pallas=False) and the
+    Pallas interpret kernel (use_pallas=True) — including odd column
+    counts (int4 pads to even) and 1-D rows."""
+    rng = np.random.default_rng(bits * 100 + sum(shape))
+    x = (rng.standard_normal(shape) * rng.uniform(1e-3, 10)).astype(
+        np.float32)
+    x2 = x.reshape(x.shape[0], -1) if x.ndim > 1 else x.reshape(-1, 1)
+    qn, sn = encode_rows(x2, bits)
+    for up in (False, True):
+        q, s = ops.quant_span_encode(np.asarray(x2), bits=bits,
+                                     use_pallas=up)
+        np.testing.assert_array_equal(qn, np.asarray(q),
+                                      err_msg=f"q use_pallas={up}")
+        np.testing.assert_array_equal(sn, np.asarray(s),
+                                      err_msg=f"scale use_pallas={up}")
+        d = ops.quant_span_decode(q, s, cols=x2.shape[1], bits=bits,
+                                  use_pallas=up)
+        np.testing.assert_array_equal(
+            decode_rows(qn, sn, x2.shape[1], bits), np.asarray(d),
+            err_msg=f"decode use_pallas={up}")
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_fused_span_apply_matches_host_overlay(bits):
+    """The device scatter (dequantize + dynamic_update_slice) lands the
+    exact bytes the host overlay writes."""
+    base = rand((32, 3, 4))
+    block = rand((5, 3, 4), scale=3.0)
+    q, s = encode_rows(block.reshape(5, -1), bits)
+    expect = np.array(base)
+    expect[7:12] = decode_rows(q, s, 12, bits).reshape(5, 3, 4)
+    for up in (False, True):
+        got = ops.fused_span_apply(np.asarray(base), 7, np.asarray(q),
+                                   np.asarray(s), bits=bits, use_pallas=up)
+        np.testing.assert_array_equal(expect, np.asarray(got),
+                                      err_msg=f"use_pallas={up}")
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_codec_bounds_and_error(bits):
+    qmax = 127 if bits == 8 else 7
+    x = rand((16, 24), scale=5.0)
+    q, s = encode_rows(x, bits)
+    d = decode_rows(q, s, 24, bits)
+    if bits == 8:
+        assert np.abs(q.astype(np.int32)).max() <= qmax
+    # reconstruction error bounded by half a quantization step per row
+    err = np.abs(d - x)
+    assert np.all(err <= 0.5 * s + 1e-7)
+    # zero rows quantize to zero exactly (scale floors at 1e-12)
+    qz, sz = encode_rows(np.zeros((4, 6), np.float32), bits)
+    np.testing.assert_array_equal(
+        decode_rows(qz, sz, 6, bits), np.zeros((4, 6), np.float32))
+
+
+# --------------------------------------------------------------------------
+# QuantSpan container + frame codec
+# --------------------------------------------------------------------------
+
+def test_quant_span_geometry_and_sizes():
+    blocks = [rand((3, 8)), rand((2, 8))]
+    qs = QuantSpan.from_rows([2, 10], blocks, (16, 8), 4)
+    assert qs.extents() == [(2, 5), (10, 12)]
+    assert qs.rows == 5 and qs.cols == 8
+    assert qs.logical_nbytes == 5 * 8 * 4
+    # int4: 4 packed bytes + 4 scale bytes per 8-col row
+    assert qs.nbytes == 5 * (4 + 4)
+    assert qs.nbytes < qs.logical_nbytes
+    spans = qs.spans()
+    assert [sp.start for sp in spans] == [2, 10]
+    np.testing.assert_array_equal(
+        spans[0].data,
+        decode_rows(qs.qs[0], qs.scales[0], 8, 4).reshape(3, 8))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_span_frame_roundtrip_carries_wire_bytes_verbatim(bits):
+    ru = row_update_from_spans(
+        [Span(1, rand((2, 6))), Span(9, rand((3, 6)))], (16, 6))
+    qs = QuantSpan.from_row_update(ru, bits)
+    upd = {"params": {"w": qs}, "count": np.array(7, np.int64)}
+    rt = cio.loads_any(cio.dumps(upd))
+    got = rt["params"]["w"]
+    assert isinstance(got, QuantSpan)
+    assert got.bits == bits and got.shape == (16, 6)
+    assert got.starts == qs.starts and got.dtype == qs.dtype
+    for a, b in zip(qs.qs, got.qs):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype
+    for a, b in zip(qs.scales, got.scales):
+        np.testing.assert_array_equal(a, b)
+    # walk_leaves treats the container as one leaf, like RowUpdate
+    assert dict(walk_leaves(upd))["params/w"] is got or \
+        isinstance(dict(walk_leaves(upd))["params/w"], QuantSpan)
+
+
+# --------------------------------------------------------------------------
+# replica: quantized snapshots + error feedback
+# --------------------------------------------------------------------------
+
+def mk_replica(diff_quant, rows=64, cols=24, seed=0):
+    rng = np.random.default_rng(seed)
+    p = {"table": rand((rows, cols), scale=0.1, rng=rng),
+         "b": np.zeros(cols, np.float32)}
+    mu = {k: np.zeros_like(v) for k, v in p.items()}
+    nu = {k: np.zeros_like(v) for k, v in p.items()}
+    return _NumpyAdam(p, mu, nu, 0, lr=1e-2, track_dirty=True,
+                      dirty_granularity="row", diff_quant=diff_quant)
+
+
+def sparse_grads(rep, touch, cols=24):
+    g = np.zeros_like(rep.params["table"])
+    rng = np.random.default_rng(hash(tuple(touch)) % (2 ** 31))
+    for r in touch:
+        g[r] = rand(cols, rng=rng)
+    return {"table": g, "b": np.zeros_like(rep.params["b"])}
+
+
+@pytest.mark.parametrize("dq", ["int8", "int4"])
+def test_snapshot_emits_quant_spans_with_residuals(dq):
+    rep = mk_replica(dq)
+    rep.snapshot_full()
+    rep.apply(sparse_grads(rep, [3, 4, 20]))
+    upd, deferred = rep.snapshot_dirty()
+    assert deferred == 0
+    qs = upd["params"]["table"]
+    assert isinstance(qs, QuantSpan)
+    assert qs.bits == (8 if dq == "int8" else 4)
+    assert qs.extents() == [(3, 5), (20, 21)]
+    for comp in ("mu", "nu"):
+        assert isinstance(upd[comp]["table"], QuantSpan)
+        # Adam moments floor at 8 bits: 4-bit moment error is amplified
+        # by 1/sqrt(nu) on resume and diverges
+        assert upd[comp]["table"].bits == 8
+    # residual == persisted value - dequantized value on touched rows
+    res = rep._row_resid[("params", "table")]
+    span = qs.spans()[0]
+    np.testing.assert_allclose(
+        res[3:5], rep.params["table"][3:5] - span.data, atol=0, rtol=0)
+    # untouched rows carry no residual
+    assert np.all(res[6:20] == 0)
+
+
+def test_error_feedback_keeps_residuals_bounded():
+    """Quantizing corrected = raw + residual keeps the deferred error
+    bounded by half a quantization step on every persist — it never
+    random-walks or compounds down a long chain of re-persists of the
+    same rows (the Check-N-Run §4 argument)."""
+    rep = mk_replica("int4")
+    rep.snapshot_full()
+    for it in range(20):
+        rep.apply(sparse_grads(rep, [5, 6]))
+        upd, _ = rep.snapshot_dirty()
+        qs = upd["params"]["table"]
+        assert isinstance(qs, QuantSpan)
+        # the persisted bytes are quantize(raw + residual): the new
+        # residual (raw - dequant) is at most half a step per row
+        res = rep._row_resid[("params", "table")][5:7]
+        step_half = 0.5 * np.concatenate(
+            [s for s in qs.scales]).max() + 1e-7
+        assert np.abs(res).max() <= step_half, f"persist {it}"
+
+
+def test_ef_remarks_row_at_most_once_per_persist():
+    """threshold > 0: a quantized persist re-marks rows whose residual
+    beats the threshold — but a re-marked row that re-persists without a
+    fresh gradient is NOT re-marked again (no static-row ping-pong)."""
+    rep = mk_replica("int4")
+    rep.snapshot_full()
+    rep.apply(sparse_grads(rep, [7]))
+    upd, _ = rep.snapshot_dirty(threshold=1e-9)   # any residual re-marks
+    assert isinstance(upd["params"]["table"], QuantSpan)
+    assert rep._row_dirty["table"][7]             # corrective pass queued
+    upd2, _ = rep.snapshot_dirty(threshold=1e-9)  # corrective persist
+    assert upd2["params"]["table"].extents() == [(7, 8)]
+    # residual still nonzero, but qpending blocks a third pass
+    assert not rep._row_dirty["table"][7]
+    upd3, _ = rep.snapshot_dirty(threshold=1e-9)
+    assert upd3["params"] == {}
+
+
+def test_ef_threshold_zero_never_remarks():
+    rep = mk_replica("int8")
+    rep.snapshot_full()
+    rep.apply(sparse_grads(rep, [2, 9]))
+    rep.snapshot_dirty()                          # threshold == 0
+    assert not rep._row_dirty["table"].any()
+    assert rep.snapshot_dirty()[0]["params"] == {}
+
+
+def test_full_snapshot_resets_residuals():
+    rep = mk_replica("int4")
+    rep.snapshot_full()
+    rep.apply(sparse_grads(rep, [1]))
+    rep.snapshot_dirty()
+    assert np.any(rep._row_resid[("params", "table")] != 0)
+    rep.snapshot_full()                           # raw persist: no error
+    assert not np.any(rep._row_resid[("params", "table")] != 0)
+
+
+def test_remark_dirty_zeroes_stale_residuals():
+    """A failed quantized persist re-marks its spans AND drops their
+    residuals: the correction belonged to bytes that never landed."""
+    rep = mk_replica("int8")
+    rep.snapshot_full()
+    rep.apply(sparse_grads(rep, [4, 5]))
+    upd, _ = rep.snapshot_dirty()
+    assert np.any(rep._row_resid[("params", "table")][4:6] != 0)
+    rep.remark_dirty(upd)
+    assert not np.any(rep._row_resid[("params", "table")][4:6] != 0)
+    again, _ = rep.snapshot_dirty()
+    assert again["params"]["table"].extents() == upd["params"]["table"] \
+        .extents()
+
+
+# --------------------------------------------------------------------------
+# recovery: quantized + mixed chains, all five backends, host and device
+# --------------------------------------------------------------------------
+
+def mk_backend_store(tmp_path, kind):
+    root = str(tmp_path / kind)
+    if kind == "local":
+        return make_store(root)
+    if kind == "sharded":
+        return make_store(root, backend="sharded", shards=3)
+    if kind == "memory":
+        return make_store(root, backend="memory")
+    if kind == "remote":
+        be = RemoteObjectBackend(FakeObjectStore(), chunk_bytes=4096,
+                                 journal_root=root)
+        return CheckpointStore(backend=be)
+    if kind == "peer":
+        cfg = StoreConfig.from_legacy(
+            root, peers=2, peer_hub=f"qd_{os.path.basename(str(tmp_path))}",
+            simulate_peers=True)
+        return cfg.build()
+    raise AssertionError(kind)
+
+
+def drive_quant_chain(store, dq, persists=5):
+    rep = mk_replica(dq, rows=96, seed=3)
+    base = store.save_full(1, rep.snapshot_full(), record_names=True)
+    expected = {k: ({kk: np.array(vv) for kk, vv in v.items()}
+                    if isinstance(v, dict) else np.array(v))
+                for k, v in rep.snapshot_full().items()}
+    rng = np.random.default_rng(17)
+    for step in range(2, 2 + persists):
+        touch = rng.choice(96, size=6, replace=False)
+        rep.apply(sparse_grads(rep, sorted(int(r) for r in touch)))
+        updates, _ = rep.snapshot_dirty()
+        store.save_patch(step, base, updates)
+        merge_updates(expected, updates)
+    return base, expected, 1 + persists
+
+
+@pytest.mark.parametrize("kind", ["local", "sharded", "memory",
+                                  "remote", "peer"])
+@pytest.mark.parametrize("dq", ["int8", "int4"])
+def test_quant_chain_recovers_bit_identical_host_and_device(tmp_path,
+                                                            kind, dq):
+    """The acceptance bar: a quantized chain recovers bit-identical to
+    its dequantized overlay on the host path and the device replay
+    path, on every backend."""
+    store = mk_backend_store(tmp_path, kind)
+    try:
+        base, expected, last = drive_quant_chain(store, dq)
+        got, step = store.load_latest_state()
+        assert step == last
+        assert_state_equal(expected, got, f"{kind}/{dq} host")
+        dgot, dstep = recovery.load_state_device(store)
+        assert dstep == last
+        assert_state_equal(expected, dgot, f"{kind}/{dq} device")
+    finally:
+        store.close()
+
+
+@pytest.mark.parametrize("kind", ["local", "sharded", "memory",
+                                  "remote", "peer"])
+def test_mixed_chain_replays_and_folds_on_every_backend(tmp_path, kind):
+    """raw-span base + int8 patch + int4 patch: the chain replays
+    newest-wins and folds bit-identical-after-dequant — fold writes raw
+    dequantized rows, never quantize-of-quantize."""
+    store = mk_backend_store(tmp_path, kind)
+    try:
+        w = rand((48, 8))
+        state = {"params": {"w": w}, "count": np.array(0, np.int64)}
+        base = store.save_full(1, state, record_names=True)
+        expected = {"params": {"w": np.array(w)},
+                    "count": np.array(0, np.int64)}
+        # raw row-span patch
+        raw = {"params": {"w": row_update_from_spans(
+            [Span(2, rand((3, 8))), Span(30, rand((2, 8)))], (48, 8))},
+            "count": np.array(1, np.int64)}
+        store.save_patch(2, base, raw)
+        merge_updates(expected, raw)
+        # int8 patch overlapping the raw spans (newest wins)
+        q8 = {"params": {"w": QuantSpan.from_rows(
+            [3, 40], [rand((2, 8)), rand((4, 8))], (48, 8), 8)},
+            "count": np.array(2, np.int64)}
+        store.save_patch(3, base, q8)
+        merge_updates(expected, q8)
+        # int4 patch overlapping both
+        q4 = {"params": {"w": QuantSpan.from_rows(
+            [2, 41], [rand((2, 8)), rand((2, 8))], (48, 8), 4)},
+            "count": np.array(3, np.int64)}
+        store.save_patch(4, base, q4)
+        merge_updates(expected, q4)
+
+        got, step = store.load_latest_state()
+        assert step == 4
+        assert_state_equal(expected, got, f"{kind} mixed replay")
+        dgot, _ = recovery.load_state_device(store)
+        assert_state_equal(expected, dgot, f"{kind} mixed device")
+
+        # manifest journals the codec per quantized patch
+        codecs = {e["step"]: e.get("codec") for e in
+                  store.manifest["patches"]}
+        assert codecs[2] is None and codecs[3] == ["int8"] \
+            and codecs[4] == ["int4"]
+
+        assert store.fold_sync() == 3
+        folded = store.load_full(store.latest_full())
+        assert_state_equal(expected, folded, f"{kind} mixed fold")
+        # the folded base holds raw bytes: reload matches exactly
+        got2, _ = store.load_latest_state()
+        assert_state_equal(expected, got2, f"{kind} refold")
+    finally:
+        store.close()
+
+
+def test_crash_at_mid_span_with_quantized_payload(tmp_path):
+    """A kill between two row-span pwrites while folding a quantized
+    patch leaves torn raw ranges in the base frame — the chain replays
+    over them on restart, and a refold completes."""
+
+    class Killed(RuntimeError):
+        pass
+
+    root = str(tmp_path / "s")
+    store = make_store(root)
+    base, expected, last = drive_quant_chain(store, "int4", persists=3)
+
+    def hook(p):
+        if p == "patch:mid_span":
+            raise Killed(p)
+    cio.set_patch_crash_hook(hook)
+    try:
+        with pytest.raises(Killed):
+            store.fold_sync()
+    finally:
+        cio.set_patch_crash_hook(None)
+    store.journal.close()
+
+    store2 = make_store(root)
+    try:
+        got, step = store2.load_latest_state()
+        assert step == last
+        assert_state_equal(expected, got, "after mid_span kill")
+        assert store2.fold_sync() == 3
+        assert_state_equal(expected, store2.load_full(store2.latest_full()),
+                           "refold")
+        assert store2.backend.verify(base) is None
+    finally:
+        store2.close()
+
+
+# --------------------------------------------------------------------------
+# chain_amplification: stored bytes, not logical span bytes
+# --------------------------------------------------------------------------
+
+def test_chain_amplification_uses_stored_not_logical_bytes(tmp_path):
+    """Satellite: the adaptive fold trigger reads what the backend
+    actually wrote. A quantized patch's manifest entry carries stored
+    ``bytes`` < journaled logical ``span_bytes``, and the amplification
+    ratio sums the stored side."""
+    store = make_store(str(tmp_path / "s"))
+    try:
+        w = rand((256, 64))
+        base = store.save_full(1, {"params": {"w": w},
+                                   "count": np.array(0, np.int64)},
+                               record_names=True)
+        base_bytes = next(int(e["bytes"]) for e in store.manifest["fulls"])
+        qs = QuantSpan.from_rows([0], [rand((64, 64))], (256, 64), 4)
+        store.save_patch(2, base, {"params": {"w": qs},
+                                   "count": np.array(1, np.int64)})
+        entry = store.manifest["patches"][-1]
+        assert entry["codec"] == ["int4"]
+        # logical side: the raw bytes those rows would occupy
+        assert entry["span_bytes"] == 64 * 64 * 4
+        # stored side: roughly 8x smaller (nibbles + scales + framing)
+        assert entry["bytes"] < entry["span_bytes"] / 4
+        assert store.chain_amplification() == pytest.approx(
+            entry["bytes"] / base_bytes)
+    finally:
+        store.close()
+
+
+# --------------------------------------------------------------------------
+# config plumbing
+# --------------------------------------------------------------------------
+
+def test_lowdiff_plus_rejects_bad_diff_quant_combos(tmp_path):
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+    store = make_store(str(tmp_path / "s"))
+    try:
+        with pytest.raises(ValueError, match="diff_quant"):
+            LowDiffPlus(object(), store, diff_quant="int2")
+        with pytest.raises(ValueError, match="dirty-granularity row"):
+            LowDiffPlus(object(), store, persist_mode="incremental",
+                        dirty_granularity="leaf", diff_quant="int8")
+        with pytest.raises(ValueError, match="persist-mode incremental"):
+            LowDiffPlus(object(), store, persist_mode="full",
+                        diff_quant="int4")
+        model = build_model(get_config("qwen2-1.5b").reduced())
+        eng = LowDiffPlus(model, store, persist_mode="incremental",
+                          dirty_granularity="row", diff_quant="int8")
+        assert eng.stats()["diff_quant"] == "int8"
+        assert "quant" in eng.stats()
+    finally:
+        store.close()
+
+
+def test_engine_config_diff_quant_validation():
+    from repro.checkpoint.config import StoreConfigError
+    cfg = EngineConfig(strategy="lowdiff_plus", persist_mode="incremental",
+                       dirty_granularity="row", diff_quant="int4")
+    cfg.validate()
+    assert cfg.to_dict()["diff_quant"] == "int4"
+    assert EngineConfig.from_dict(cfg.to_dict()).diff_quant == "int4"
+    with pytest.raises(StoreConfigError, match="diff_quant"):
+        EngineConfig(diff_quant="fp8").validate()
+
+
+def test_quant_meter_counts_encode_and_decode(tmp_path):
+    QUANT_METER.reset()
+    store = make_store(str(tmp_path / "s"))
+    try:
+        drive_quant_chain(store, "int4", persists=2)
+        store.load_latest_state()
+        s = QUANT_METER.stats()
+        assert s["bytes_in"] > 0 and s["bytes_out"] > 0
+        assert s["bytes_out"] < s["bytes_in"]
+        assert s["ratio"] == pytest.approx(s["bytes_in"] / s["bytes_out"])
+        assert s["encode_s"] >= 0 and s["decode_s"] > 0
+    finally:
+        store.close()
+        QUANT_METER.reset()
